@@ -1,0 +1,100 @@
+"""Table-1 analogue: TURBO-style batched engine vs sequential CPU solver.
+
+The paper compares TURBO (GPU, 3072 cores) against parallel GECODE (6
+cores) on Patterson + PSPLIB j30.  This container has one CPU and no
+PSPLIB files, so (DESIGN.md §8): instances come from the seeded generator
+in the same families, GECODE's role is played by our event-driven
+sequential solver (same model, same branching), and the batched engine
+runs with `--lanes` vectorized lanes.  Columns mirror Table 1:
+feas / opt / nodes-per-sec / time.  The GPU-side claim that survives CPU
+emulation is *throughput scaling with lanes* (bench_propagation.py) and
+*identical objectives* (determinism, Thm 6); wall-clock superiority needs
+the real accelerator.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+from repro.core import baseline, engine
+from repro.core import search as S
+from repro.core.models import rcpsp
+
+
+def suite(kind: str, full: bool):
+    if kind == "patterson-like":
+        sizes = [14, 18, 22] if full else [6, 8, 10]
+        return [rcpsp.generate(n, n_resources=3, seed=s, edge_prob=0.25)
+                for n in sizes for s in range(4 if full else 3)]
+    if kind == "j30-like":
+        sizes = [30] if full else [12]
+        return [rcpsp.generate(n, n_resources=4, seed=s, edge_prob=0.2)
+                for n in sizes for s in range(4 if full else 3)]
+    raise ValueError(kind)
+
+
+def run_suite(name: str, instances: List[rcpsp.RCPSP], timeout_s: float,
+              lanes: int, subs: int, rows: List[str]):
+    opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=1024)
+    # §Perf P0/H1: the optimized profile caps sweeps per superstep
+    # (bounded chaotic iteration; identical optima, 1.7–2.5× faster)
+    opts_fast = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=1024,
+                                max_fixpoint_iters=4)
+    agg = {}
+    for solver_name in ("sequential", "turbo-jax", "turbo-jax-opt"):
+        feas = opt = nodes = 0
+        wall = 0.0
+        objs = []
+        for inst in instances:
+            m, _ = rcpsp.build_model(inst)
+            cm = m.compile()
+            if solver_name == "sequential":
+                res = baseline.SequentialSolver(cm, opts).solve(
+                    timeout_s=timeout_s)
+            elif solver_name == "turbo-jax":
+                res = engine.solve(cm, n_lanes=lanes, n_subproblems=subs,
+                                   opts=opts, timeout_s=timeout_s)
+            else:
+                res = engine.solve(cm, n_lanes=lanes, n_subproblems=subs,
+                                   opts=opts_fast, timeout_s=timeout_s)
+            feas += res.solution is not None
+            opt += res.status == engine.OPTIMAL
+            nodes += res.n_nodes
+            wall += res.wall_s
+            objs.append((res.objective, res.status))
+        agg[solver_name] = objs
+        rows.append(f"{name},{solver_name},{len(instances)},{feas},{opt},"
+                    f"{nodes / max(wall, 1e-9):.0f},{wall:.1f}")
+    # determinism cross-check: identical objectives wherever BOTH proved
+    # optimality (timed-out incumbents legitimately differ)
+    def _mism(x, y):
+        return sum(1 for (a, sa), (b, sb) in zip(x, y)
+                   if sa == engine.OPTIMAL and sb == engine.OPTIMAL
+                   and a != b)
+    mism = _mism(agg["sequential"], agg["turbo-jax"]) +         _mism(agg["turbo-jax"], agg["turbo-jax-opt"])
+    rows.append(f"{name},objective-mismatches,{len(instances)},{mism},,,")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="bigger instances (minutes-scale, paper-like)")
+    ap.add_argument("--timeout", type=float, default=None)
+    ap.add_argument("--lanes", type=int, default=32)
+    ap.add_argument("--subs", type=int, default=128)
+    args = ap.parse_args(argv)
+    timeout = args.timeout or (300 if args.full else 30)
+
+    rows = ["suite,solver,instances,feasible,optimal,nodes_per_sec,time_s"]
+    for kind in ("patterson-like", "j30-like"):
+        run_suite(kind, suite(kind, args.full), timeout, args.lanes,
+                  args.subs, rows)
+    print("\n".join(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the JSON
+reports produced by launch/dryrun.py and benchmarks/roofline.py."""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def dryrun_table(path: str) -> str:
+    with open(path) as f:
+        recs = json.load(f)
+    out = ["| arch | shape | mesh | compile s | args GB/dev | temp GB/dev "
+           "| HLO flops/dev* | coll GB/dev* | collective ops |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "SKIP":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"SKIP — {r['reason'].split('(')[0].strip()} | | | | | |")
+            continue
+        pd = r["per_device"]
+        ops = ", ".join(f"{k.split('-')[-1]}:{v}"
+                        for k, v in r["hlo_ops"].items() if v) or "—"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']:.1f} | {pd['argument_bytes']/1e9:.2f} | "
+            f"{pd['temp_bytes']/1e9:.2f} | {pd['flops']:.3g} | "
+            f"{r['collectives']['total']/1e9:.3f} | {ops} |")
+    out.append("")
+    out.append("*scanned-HLO numbers: scan bodies counted once by XLA "
+               "cost analysis — see §Roofline for depth-corrected terms.")
+    return "\n".join(out)
+
+
+def roofline_table(path: str) -> str:
+    with open(path) as f:
+        recs = json.load(f)
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | useful ratio | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "SKIP":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.2f}ms | "
+            f"{r['memory_s']*1e3:.2f}ms | {r['collective_s']*1e3:.2f}ms | "
+            f"{r['bottleneck']} | {r['useful_ratio']} | "
+            f"{r['roofline_frac']} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="dryrun_report.json")
+    ap.add_argument("--roofline", default="roofline_report.json")
+    ap.add_argument("--which", default="both")
+    a = ap.parse_args()
+    if a.which in ("both", "dryrun"):
+        print(dryrun_table(a.dryrun))
+    if a.which in ("both", "roofline"):
+        print(roofline_table(a.roofline))

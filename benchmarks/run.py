@@ -1,0 +1,47 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One harness per paper table/figure:
+  * Table 1 analogue  — bench_solver (batched engine vs sequential CPU)
+  * propagation claim — bench_propagation (throughput vs lane count)
+plus the planner micro-benchmark (framework-integration feature).
+
+Roofline (§Roofline of EXPERIMENTS.md) is the separate heavyweight
+harness: ``python -m benchmarks.roofline --all`` (needs the 512-device
+dry-run env; see benchmarks/roofline.py).
+Prints ``name,us_per_call,derived`` CSV per the repo convention.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    print("# === propagation throughput (paper: parallel propagation) ===")
+    from benchmarks import bench_propagation
+    t0 = time.time()
+    bench_propagation.main(["--lanes", "1", "8", "32"] +
+                           (["--skip-pallas"] if fast else []))
+    print(f"# bench_propagation,{(time.time()-t0)*1e6:.0f},wall_us")
+
+    print("\n# === Table 1 analogue (solver suites) ===")
+    from benchmarks import bench_solver
+    t0 = time.time()
+    bench_solver.main(["--timeout", "20"] if fast else [])
+    print(f"# bench_solver,{(time.time()-t0)*1e6:.0f},wall_us")
+
+    print("\n# === planner (pipeline scheduling as RCPSP) ===")
+    from repro.distributed import planner
+    t0 = time.time()
+    starts, mk, res = planner.schedule_microbatches([3, 3, 3, 3], 4,
+                                                    timeout_s=60)
+    dt = (time.time() - t0) * 1e6
+    print("name,us_per_call,derived")
+    print(f"schedule_microbatches_4x4,{dt:.0f},makespan={mk}"
+          f";status={res.status}")
+
+
+if __name__ == "__main__":
+    main()

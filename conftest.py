@@ -1,0 +1,7 @@
+"""Repo-root conftest: puts the repo root on sys.path so tests can import
+the `benchmarks` package (`PYTHONPATH=src pytest tests/` covers `repro`).
+
+Deliberately does NOT set the 512-device XLA flag — smoke tests and
+benches must see 1 device; dry-run tests spawn subprocesses with their
+own flags (see tests/test_dryrun.py).
+"""

@@ -1,0 +1,223 @@
+"""Sequential propagate-and-search baseline (the paper's GECODE stand-in).
+
+GECODE is not installable offline, so the CPU baseline the benchmarks
+compare against is this classic *sequential* solver: an event-driven
+propagation loop (propagators re-queued only when a watched variable
+changes — the standard AC-3/AC-5-style engine the paper contrasts its
+eventless AC-1 loop with), depth-first search with chronological
+backtracking on copied stores, and branch & bound.
+
+It shares the Model/CompiledModel representation and uses the *same*
+propagator math (one numpy transcription of `propagator_candidates` row
+semantics), so objective values must agree exactly with the parallel
+engine — that agreement is itself a correctness test of both.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.compile import CompiledModel
+from repro.core import search as S
+from repro.core.engine import OPTIMAL, SAT, UNSAT, UNKNOWN, SolveResult
+
+
+def _row_update(cm, lb, ub, p: int,
+                vidx, coef, rhs, bidx, box_lo, box_hi) -> List[int]:
+    """Apply propagator row p in place; return list of changed var indices."""
+    a = coef[p]
+    vs = vidx[p]
+    c = int(rhs[p])
+    b = int(bidx[p])
+    xl = lb[vs].astype(np.int64)
+    xu = ub[vs].astype(np.int64)
+    al = a.astype(np.int64)
+    tl = np.where(al > 0, al * xl, al * xu)
+    tu = np.where(al > 0, al * xu, al * xl)
+    smin = int(tl.sum())
+    smax = int(tu.sum())
+    changed: List[int] = []
+
+    def tighten_ub(v: int, val: int):
+        val = max(val, int(box_lo[v]))
+        if val < ub[v]:
+            ub[v] = val
+            changed.append(v)
+
+    def tighten_lb(v: int, val: int):
+        val = min(val, int(box_hi[v]))
+        if val > lb[v]:
+            lb[v] = val
+            changed.append(v)
+
+    if lb[b] >= 1:                           # ask b: Σ a x ≤ c
+        for k in range(len(vs)):
+            ak = int(al[k])
+            if ak == 0:
+                continue
+            slack = c - (smin - int(tl[k]))
+            if ak > 0:
+                tighten_ub(int(vs[k]), slack // ak)
+            else:
+                tighten_lb(int(vs[k]), -((-slack) // ak))
+    if ub[b] <= 0:                           # ask ¬b: Σ -a x ≤ -c-1
+        for k in range(len(vs)):
+            ak = -int(al[k])
+            if ak == 0:
+                continue
+            slack = (-c - 1) - (-smax + int(tu[k]))
+            if ak > 0:
+                tighten_ub(int(vs[k]), slack // ak)
+            else:
+                tighten_lb(int(vs[k]), -((-slack) // ak))
+    if smax <= c:
+        tighten_lb(b, 1)                     # entailed
+    if smin > c:
+        tighten_ub(b, 0)                     # disentailed
+    return changed
+
+
+class SequentialSolver:
+    """Event-queue propagation + DFS + B&B on numpy stores."""
+
+    def __init__(self, cm: CompiledModel, opts: Optional[S.SearchOptions] = None):
+        self.cm = cm
+        self.opts = opts or S.SearchOptions()
+        self.vidx = np.asarray(cm.vidx)
+        self.coef = np.asarray(cm.coef)
+        self.rhs = np.asarray(cm.rhs)
+        self.bidx = np.asarray(cm.bidx)
+        self.box_lo = np.asarray(cm.box_lo)
+        self.box_hi = np.asarray(cm.box_hi)
+        self.branch_vars = np.asarray(cm.branch_vars)
+        P = cm.n_props
+        # watchers: var -> props that mention it (terms or reif bool)
+        self.watch: List[List[int]] = [[] for _ in range(cm.n_vars)]
+        for p in range(P):
+            seen = set()
+            for k in range(cm.k_terms):
+                if self.coef[p, k] != 0:
+                    seen.add(int(self.vidx[p, k]))
+            seen.add(int(self.bidx[p]))
+            for v in seen:
+                self.watch[v].append(p)
+
+    def propagate(self, lb, ub, dirty: Optional[List[int]] = None) -> bool:
+        """Event loop to fixpoint. Returns False on failure."""
+        P = self.cm.n_props
+        if dirty is None:
+            queue = list(range(P))
+            queued = [True] * P
+        else:
+            queue = []
+            queued = [False] * P
+            for v in dirty:
+                for p in self.watch[v]:
+                    if not queued[p]:
+                        queued[p] = True
+                        queue.append(p)
+        qi = 0
+        while qi < len(queue):
+            p = queue[qi]
+            qi += 1
+            queued[p] = False
+            changed = _row_update(self.cm, lb, ub, p, self.vidx, self.coef,
+                                  self.rhs, self.bidx, self.box_lo, self.box_hi)
+            for v in changed:
+                if lb[v] > ub[v]:
+                    return False
+                for q in self.watch[v]:
+                    if not queued[q]:
+                        queued[q] = True
+                        queue.append(q)
+            if qi > 4096 * P:                # safety valve
+                raise RuntimeError("event loop runaway")
+        return True
+
+    def solve(self, timeout_s: Optional[float] = None,
+              node_budget: Optional[int] = None) -> SolveResult:
+        cm, opts = self.cm, self.opts
+        t0 = time.time()
+        big = np.iinfo(np.asarray(cm.lb0).dtype).max // 4
+        lb = np.asarray(cm.lb0).copy()
+        ub = np.asarray(cm.ub0).copy()
+        best_obj = big
+        best_sol = None
+        n_nodes = n_fails = n_sols = 0
+        complete = True
+
+        ok = self.propagate(lb, ub)
+        stack: List[Tuple[np.ndarray, np.ndarray]] = []
+        if ok:
+            stack.append((lb, ub))
+
+        while stack:
+            if timeout_s is not None and time.time() - t0 > timeout_s:
+                complete = False
+                break
+            if node_budget is not None and n_nodes >= node_budget:
+                complete = False
+                break
+            lb, ub = stack.pop()
+            # B&B bound tell (joined on pop => valid for the whole subtree)
+            if cm.obj_var >= 0 and best_obj < big:
+                if ub[cm.obj_var] > best_obj - 1:
+                    ub[cm.obj_var] = best_obj - 1
+                if not self.propagate(lb, ub, dirty=[cm.obj_var]):
+                    n_nodes += 1
+                    n_fails += 1
+                    continue
+            n_nodes += 1
+            bl, bu = lb[self.branch_vars], ub[self.branch_vars]
+            unfixed = bl < bu
+            if not unfixed.any():
+                n_sols += 1
+                obj = int(lb[cm.obj_var]) if cm.obj_var >= 0 else 0
+                if cm.obj_var < 0 or obj < best_obj:
+                    best_obj = obj
+                    best_sol = lb.copy()
+                if cm.obj_var < 0 and opts.stop_on_first:
+                    break
+                continue
+            # branch
+            if opts.var_strategy == S.MIN_DOM:
+                w = np.where(unfixed, bu - bl, big)
+                pos = int(np.argmin(w))
+            elif opts.var_strategy == S.MIN_LB:
+                w = np.where(unfixed, bl, big)
+                pos = int(np.argmin(w))
+            else:
+                pos = int(np.argmax(unfixed))
+            v = int(self.branch_vars[pos])
+            mval = int(lb[v]) if opts.val_strategy == S.VAL_MIN \
+                else int((lb[v] + ub[v]) // 2)
+            # right child pushed first => left (x ≤ m) explored first
+            rl, ru = lb.copy(), ub.copy()
+            rl[v] = mval + 1
+            if rl[v] <= ru[v] and self.propagate(rl, ru, dirty=[v]):
+                stack.append((rl, ru))
+            ll, lu = lb, ub                   # reuse parent arrays for left
+            lu[v] = mval
+            if ll[v] <= lu[v] and self.propagate(ll, lu, dirty=[v]):
+                stack.append((ll, lu))
+            else:
+                n_fails += 1
+
+        wall = time.time() - t0
+        has = best_sol is not None
+        if has:
+            status = OPTIMAL if complete and cm.obj_var >= 0 else SAT
+            if cm.obj_var < 0:
+                status = SAT
+        else:
+            status = UNSAT if complete else UNKNOWN
+        return SolveResult(
+            status=status,
+            objective=(int(best_obj) if has and cm.obj_var >= 0 else None),
+            solution=best_sol, n_nodes=n_nodes, n_fails=n_fails,
+            n_sols=n_sols, n_sweeps=0, n_supersteps=0, wall_s=wall,
+            complete=complete)

@@ -1,0 +1,172 @@
+"""⟦.⟧ — lower a Model to dense guarded-command tables (paper Prop. 4).
+
+Every constraint becomes one row of the *propagator table*; the row is the
+guarded-normal-form of the paper: the ask set is {b} (plus the implicit
+guard "still consistent"), the tells are the interval tightenings of the
+reified linear inequality.
+
+Two dual views of the same program are produced:
+
+* **propagator-centric** (`vidx/coef/rhs/bidx`): one row per propagator —
+  this is what a CUDA thread would execute; used by the scatter oracle
+  (`kernels/ref.py`) and by the sequential baseline.
+* **variable-centric** (`occ_prop/occ_slot`): for each variable, the list
+  of (propagator, slot) occurrences that may tighten it — the TPU-native
+  gather formulation used by the fixpoint engine and the Pallas kernel.
+  Joins become per-variable min/max reductions: associativity of ⊔ makes
+  the two views compute the same sweep (validated by tests).
+
+Overflow policy: all candidate bounds are clamped into the *initial box*
+``[lb0-1, ub0+1]`` (sound: a candidate outside the box still crosses the
+opposite bound, so failure is preserved), and compile-time checks ensure
+``Σ_j |a_j| · (max(|lb0_j|, |ub0_j|) + 1)`` fits the dtype with headroom.
+Models that exceed int32 headroom are auto-promoted to int64.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.model import Model, ReifLinLe, TRUE_VAR
+
+# slot code for "this occurrence is the reified boolean of the propagator"
+# (stored as slot == K, one past the last term slot).
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CompiledModel:
+    """Dense, fixed-shape program. All arrays are device-ready.
+
+    Shapes: V vars, P props (+1 trailing dummy row), K padded terms,
+    D padded occurrences per var, B branch vars.
+    """
+
+    # store init
+    lb0: jax.Array          # i[V]
+    ub0: jax.Array          # i[V]
+    box_lo: jax.Array       # i[V]  = lb0 - 1 (clamp floor)
+    box_hi: jax.Array       # i[V]  = ub0 + 1 (clamp ceil)
+    # propagator-centric tables (row P is the neutral dummy)
+    vidx: jax.Array         # i[P+1, K] var index per term (0 for padding)
+    coef: jax.Array         # i[P+1, K] coefficient (0 for padding)
+    rhs: jax.Array          # i[P+1]
+    bidx: jax.Array         # i[P+1]   reif bool var (TRUE_VAR for plain)
+    # variable-centric occurrence tables (padding points at dummy row, slot 0)
+    occ_prop: jax.Array     # i[V, D]
+    occ_slot: jax.Array     # i[V, D]  in [0, K]; K == reif-entailment slot
+    # search
+    branch_vars: jax.Array  # i[B] decision vars in branching order
+    # static metadata
+    n_vars: int = dataclasses.field(metadata=dict(static=True))
+    n_props: int = dataclasses.field(metadata=dict(static=True))
+    k_terms: int = dataclasses.field(metadata=dict(static=True))
+    d_occ: int = dataclasses.field(metadata=dict(static=True))
+    obj_var: int = dataclasses.field(metadata=dict(static=True))  # -1 if satisfaction
+    dtype: str = dataclasses.field(metadata=dict(static=True))
+    name: str = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def jdtype(self):
+        return np.dtype(self.dtype)
+
+
+def compile_model(
+    m: Model,
+    pad_terms_to: int = 8,
+    pad_occ_to: int = 8,
+    force_dtype: str | None = None,
+) -> CompiledModel:
+    V = m.n_vars
+    props: List[ReifLinLe] = m.props
+    P = len(props)
+    if P == 0:
+        raise ValueError("model has no constraints")
+
+    K = max(len(p.lin.terms) for p in props)
+    K = max(_round_up(K, pad_terms_to), pad_terms_to)
+
+    lb0 = np.asarray(m.lb0, dtype=np.int64)
+    ub0 = np.asarray(m.ub0, dtype=np.int64)
+
+    vidx = np.zeros((P + 1, K), dtype=np.int64)
+    coef = np.zeros((P + 1, K), dtype=np.int64)
+    rhs = np.zeros((P + 1,), dtype=np.int64)
+    bidx = np.full((P + 1,), TRUE_VAR, dtype=np.int64)
+
+    occs: List[List[Tuple[int, int]]] = [[] for _ in range(V)]
+    for p, rp in enumerate(props):
+        terms = rp.lin.terms
+        if len(terms) > K:
+            raise ValueError("term overflow")
+        for k, (v, a) in enumerate(terms):
+            vidx[p, k] = v
+            coef[p, k] = a
+            occs[v].append((p, k))
+        rhs[p] = rp.lin.rhs
+        bidx[p] = rp.bvar
+        if rp.bvar != TRUE_VAR:
+            # genuinely reified: b can be tightened by (dis)entailment.
+            occs[rp.bvar].append((p, K))
+        # plain props (b == TRUE) fail through term tightening alone; we
+        # skip their reif occurrence so the TRUE var's degree stays 0.
+
+    # dummy row P: coef 0 everywhere -> all candidates neutral; rhs huge so
+    # it is "entailed" but its reif slot is never gathered.
+    rhs[P] = int(np.iinfo(np.int32).max // 4)
+
+    D = max(max((len(o) for o in occs), default=1), 1)
+    D = max(_round_up(D, pad_occ_to), pad_occ_to)
+    occ_prop = np.full((V, D), P, dtype=np.int64)   # pad -> dummy row
+    occ_slot = np.zeros((V, D), dtype=np.int64)     # pad -> term slot 0 (coef 0)
+    for v, o in enumerate(occs):
+        for d, (p, k) in enumerate(o):
+            occ_prop[v, d] = p
+            occ_slot[v, d] = k
+
+    # ---- dtype selection with overflow headroom ------------------------
+    absmax = np.maximum(np.abs(lb0), np.abs(ub0)) + 1           # per var
+    per_prop_sum = np.abs(coef[:P]) @ np.ones((K,), np.int64)   # not used alone
+    worst = int((np.abs(coef[:P]) * absmax[vidx[:P]]).sum(axis=1).max()) \
+        if P else 0
+    worst = max(worst, int(np.abs(rhs[:P]).max()) if P else 0)
+    del per_prop_sum
+    if force_dtype is not None:
+        dtype = force_dtype
+    elif worst * 4 < np.iinfo(np.int32).max:
+        dtype = "int32"
+    else:
+        dtype = "int64"
+    if worst * 4 >= np.iinfo(np.int64).max:
+        raise OverflowError("model exceeds int64 headroom")
+
+    branch = list(m.branch_order) if m.branch_order else list(range(1, V))
+    # ensure every non-fixed var is ultimately branchable: append leftovers
+    missing = [v for v in range(1, V) if v not in set(branch)]
+    branch = branch + missing
+
+    if dtype == "int64" and not jax.config.jax_enable_x64:
+        raise OverflowError(
+            f"model '{m.name}' needs int64 headroom (worst sum {worst}); "
+            "set JAX_ENABLE_X64=1 or pass force_dtype after re-scaling")
+    # leaves are jnp so the tables work when closed over (not jit args)
+    cast = lambda a: jnp.asarray(np.asarray(a, dtype=dtype))  # noqa: E731
+    return CompiledModel(
+        lb0=cast(lb0), ub0=cast(ub0),
+        box_lo=cast(lb0 - 1), box_hi=cast(ub0 + 1),
+        vidx=cast(vidx), coef=cast(coef), rhs=cast(rhs), bidx=cast(bidx),
+        occ_prop=cast(occ_prop), occ_slot=cast(occ_slot),
+        branch_vars=cast(np.asarray(branch)),
+        n_vars=V, n_props=P, k_terms=K, d_occ=D,
+        obj_var=(m.objective if m.objective is not None else -1),
+        dtype=dtype, name=m.name,
+    )

@@ -1,0 +1,198 @@
+"""Top-level solver: EPS pool × lanes × mesh (paper §TURBO, evaluation).
+
+Execution hierarchy (the GPU→TPU mapping of DESIGN.md §2):
+
+    mesh devices (shard_map)  ↔  GPU / SMs            (EPS pool is sharded)
+    lanes per device (vmap)   ↔  CUDA blocks           (one subproblem each)
+    propagator sweep (tensor) ↔  threads within block  (one dense op)
+
+Branch & bound: each superstep ends with a cross-lane ``min`` and a
+``lax.pmin`` across every mesh axis — the analogue of TURBO's shared
+global-memory best bound, made deterministic by the lattice join.
+
+The solve loop runs in fixed-size jitted *chunks* so the host can enforce
+wall-clock timeouts (the paper uses 5 min / 30 s budgets) and so the
+multi-device while-loop has an identical trip count everywhere (the
+global-done flag is all-reduced in the body, never in the cond).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.compile import CompiledModel
+from repro.core import eps
+from repro.core import search as S
+
+OPTIMAL = "OPTIMAL"
+SAT = "SAT"
+UNSAT = "UNSAT"
+UNKNOWN = "UNKNOWN"
+
+
+@dataclasses.dataclass
+class SolveResult:
+    status: str
+    objective: Optional[int]
+    solution: Optional[np.ndarray]
+    n_nodes: int
+    n_fails: int
+    n_sols: int
+    n_sweeps: int
+    n_supersteps: int
+    wall_s: float
+    complete: bool
+
+    @property
+    def nodes_per_sec(self) -> float:
+        return self.n_nodes / max(self.wall_s, 1e-9)
+
+
+def _chunk_body(cm: CompiledModel, subs_lb, subs_ub, opts: S.SearchOptions,
+                stop_on_first: bool, axis_names, carry):
+    st, gbest, gdone, it, pool_head = carry
+    st, new_head = S.dispatch_pool(st, pool_head[0], subs_lb.shape[0])
+    pool_head = new_head[None].astype(jnp.int32)
+    st = S.lanes_step(cm, subs_lb, subs_ub, opts, st, gbest)
+    best = jnp.min(st.best_obj)
+    done = jnp.all(st.done)
+    any_sol = jnp.any(st.has_sol)
+    if axis_names:
+        best = lax.pmin(best, axis_names)
+        done = lax.pmin(done.astype(jnp.int32), axis_names) == 1
+        any_sol = lax.pmax(any_sol.astype(jnp.int32), axis_names) == 1
+    gbest = jnp.minimum(gbest, best)
+    gdone = gdone | done
+    if stop_on_first:
+        gdone = gdone | any_sol
+    return st, gbest, gdone, it + 1, pool_head
+
+
+def _run_chunk(cm: CompiledModel, subs_lb, subs_ub, opts: S.SearchOptions,
+               stop_on_first: bool, chunk: int, axis_names, carry):
+    body = partial(_chunk_body, cm, subs_lb, subs_ub, opts, stop_on_first,
+                   axis_names)
+    it0 = carry[3]
+
+    def cond(c):
+        return (~c[2]) & (c[3] - it0 < chunk)
+
+    return lax.while_loop(cond, body, carry)
+
+
+def solve(cm: CompiledModel,
+          n_lanes: int = 64,
+          n_subproblems: Optional[int] = None,
+          opts: Optional[S.SearchOptions] = None,
+          timeout_s: Optional[float] = None,
+          max_supersteps: Optional[int] = None,
+          chunk: int = 256,
+          mesh: Optional[jax.sharding.Mesh] = None,
+          lane_axes: tuple = (),
+          subs: Optional[tuple] = None,
+          ) -> SolveResult:
+    """Solve a compiled model.
+
+    Single-device by default; pass ``mesh`` + ``lane_axes`` (mesh axis names
+    to shard lanes/subproblems over) for the multi-device engine.  `subs`
+    overrides the EPS pool (used by tests and the dry-run).
+    """
+    opts = opts or S.SearchOptions()
+    t0 = time.time()
+    if subs is None:
+        n_subproblems = n_subproblems or 4 * n_lanes
+        subs_lb, subs_ub = eps.decompose(cm, n_subproblems, opts)
+    else:
+        subs_lb, subs_ub = subs
+    subs_lb = jnp.asarray(subs_lb)
+    subs_ub = jnp.asarray(subs_ub)
+
+    dt = cm.jdtype
+    big = jnp.asarray(jnp.iinfo(dt).max // 4, dt)
+
+    if mesh is not None and lane_axes:
+        n_dev = int(np.prod([mesh.shape[a] for a in lane_axes]))
+        # pad the pool to a multiple of the device count, shard it
+        Stot = subs_lb.shape[0]
+        pad = (-Stot) % n_dev
+        if pad:
+            # pad with explicitly-failed stores (consumed instantly)
+            fl = np.asarray(subs_lb[:1]).repeat(pad, 0)
+            fu = np.asarray(subs_ub[:1]).repeat(pad, 0)
+            fl[:, 0], fu[:, 0] = 1, 0
+            subs_lb = jnp.concatenate([subs_lb, jnp.asarray(fl)])
+            subs_ub = jnp.concatenate([subs_ub, jnp.asarray(fu)])
+
+        def device_solver(subs_lb_l, subs_ub_l, carry):
+            return _run_chunk(cm, subs_lb_l, subs_ub_l, opts,
+                              opts.stop_on_first, chunk, lane_axes, carry)
+
+        spec = P(lane_axes)
+        # global lane state: lane axis is sharded over `lane_axes`; each
+        # device sees `n_lanes` local lanes indexing its local pool shard.
+        state0 = S.init_lanes(cm, n_lanes * n_dev, opts)
+        carry = (state0, big, jnp.asarray(False), jnp.asarray(0, jnp.int32),
+                 jnp.zeros((n_dev,), jnp.int32))
+        state_spec = jax.tree.map(lambda _: spec, state0)
+        carry_spec = (state_spec, P(), P(), P(), spec)
+        runner = jax.jit(jax.shard_map(
+            device_solver, mesh=mesh,
+            in_specs=(spec, spec, carry_spec), out_specs=carry_spec,
+            check_vma=False))
+        run = lambda c: runner(subs_lb, subs_ub, c)  # noqa: E731
+    else:
+        state0 = S.init_lanes(cm, n_lanes, opts)
+        carry = (state0, big, jnp.asarray(False), jnp.asarray(0, jnp.int32),
+                 jnp.zeros((1,), jnp.int32))
+        runner = jax.jit(partial(_run_chunk, cm, subs_lb, subs_ub, opts,
+                                 opts.stop_on_first, chunk, ()))
+        run = runner
+
+    while True:
+        carry = jax.block_until_ready(run(carry))
+        st, gbest, gdone, it, _ = carry
+        if bool(gdone):
+            break
+        if timeout_s is not None and time.time() - t0 > timeout_s:
+            break
+        if max_supersteps is not None and int(it) >= max_supersteps:
+            break
+
+    st, gbest, gdone, it, _ = carry
+    # pull incumbent from the lane that owns it (replicated out of shard_map)
+    best_obj = np.asarray(st.best_obj)
+    has_sol = np.asarray(st.has_sol)
+    flat_best = best_obj.reshape(-1)
+    wall = time.time() - t0
+    complete = bool(gdone) and not bool(np.asarray(st.incomplete).any())
+
+    n_nodes = int(np.asarray(st.n_nodes).sum())
+    n_fails = int(np.asarray(st.n_fails).sum())
+    n_sols = int(np.asarray(st.n_sols).sum())
+    n_sweeps = int(np.asarray(st.n_sweeps).sum())
+
+    if has_sol.any():
+        i = int(flat_best.argmin()) if cm.obj_var >= 0 else \
+            int(np.asarray(has_sol).reshape(-1).argmax())
+        sol = np.asarray(st.best_sol).reshape(-1, cm.n_vars)[i]
+        obj = int(flat_best[i]) if cm.obj_var >= 0 else None
+        status = (OPTIMAL if complete and cm.obj_var >= 0 else SAT)
+        if cm.obj_var < 0:
+            status = SAT
+    else:
+        sol, obj = None, None
+        status = UNSAT if complete else UNKNOWN
+
+    return SolveResult(status=status, objective=obj, solution=sol,
+                       n_nodes=n_nodes, n_fails=n_fails, n_sols=n_sols,
+                       n_sweeps=n_sweeps, n_supersteps=int(it), wall_s=wall,
+                       complete=complete)

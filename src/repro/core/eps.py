@@ -1,0 +1,76 @@
+"""Embarrassingly-parallel-search decomposition (paper §TURBO, after
+Malapert/Régin/Rezgui 2016).
+
+TURBO "dynamically generates subproblems following a variant of EPS"; we
+generate them by iterative splitting on the host: repeatedly split the
+widest-frontier subproblem with the search branching rule, propagate both
+children with the *same* fixpoint engine, and drop failed children.  The
+resulting pool partitions the root search space (left `x ≤ m` / right
+`x ≥ m+1` are complementary), so lane-level DFS over the pool is complete.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.compile import CompiledModel
+from repro.core.fixpoint import fixpoint
+from repro.core import search as S
+
+
+def decompose(cm: CompiledModel, target: int,
+              opts: "S.SearchOptions" = None) -> Tuple[np.ndarray, np.ndarray]:
+    """Split the root into ~`target` consistent subproblems.
+
+    Returns (subs_lb, subs_ub) with shape [S, V], S ≥ 1 (S can exceed or
+    fall short of `target` when the tree is shallow/unsatisfiable).
+    """
+    opts = opts or S.SearchOptions()
+    lb, ub, _, _ = fixpoint(cm, cm.lb0, cm.ub0)
+    lb, ub = np.asarray(lb), np.asarray(ub)
+    if (lb > ub).any():
+        return lb[None], ub[None]          # failed root: one failed sub
+
+    frontier: List[Tuple[np.ndarray, np.ndarray]] = [(lb, ub)]
+    leaves: List[Tuple[np.ndarray, np.ndarray]] = []
+
+    bv = np.asarray(cm.branch_vars)
+    while frontier and len(frontier) + len(leaves) < target:
+        # widest subproblem first keeps the pool balanced
+        widths = [int((u - l)[bv].clip(min=0).sum()) for l, u in frontier]
+        i = int(np.argmax(widths))
+        l, u = frontier.pop(i)
+        unf = l[bv] < u[bv]
+        if not unf.any():
+            leaves.append((l, u))          # already a solution leaf
+            continue
+        if opts.var_strategy == S.MIN_DOM:
+            w = np.where(unf, u[bv] - l[bv], np.iinfo(l.dtype).max // 4)
+            v = int(bv[int(np.argmin(w))])
+        elif opts.var_strategy == S.MIN_LB:
+            w = np.where(unf, l[bv], np.iinfo(l.dtype).max // 4)
+            v = int(bv[int(np.argmin(w))])
+        else:
+            v = int(bv[int(np.argmax(unf))])
+        m = int(l[v]) if opts.val_strategy == S.VAL_MIN else int((l[v] + u[v]) // 2)
+        for child in ("le", "ge"):
+            cl, cu = l.copy(), u.copy()
+            if child == "le":
+                cu[v] = min(cu[v], m)
+            else:
+                cl[v] = max(cl[v], m + 1)
+            nlb, nub, _, _ = fixpoint(cm, cl, cu)
+            nlb, nub = np.asarray(nlb), np.asarray(nub)
+            if not (nlb > nub).any():
+                frontier.append((nlb, nub))
+
+    pool = frontier + leaves
+    if not pool:                            # everything failed: UNSAT root
+        bad_l = lb.copy(); bad_u = ub.copy()
+        bad_l[0] = 1; bad_u[0] = 0          # an explicitly failed store
+        pool = [(bad_l, bad_u)]
+    subs_lb = np.stack([p[0] for p in pool])
+    subs_ub = np.stack([p[1] for p in pool])
+    return subs_lb, subs_ub

@@ -1,0 +1,213 @@
+"""Eventless parallel fixpoint engine (paper §"Fixed point loop").
+
+One *sweep* executes **every** propagator once and joins all their tells
+into the store — this is the denotational parallel composition
+``D(P₁) ⊔ … ⊔ D(Pₙ)`` realized as one bulk-synchronous tensor program
+(the TPU analogue of the paper's AC-1-style loop; the `lax.while_loop`
+carry of a single `changed` flag replaces the rotating ``has_changed[3]``
++ ``__syncthreads()`` scheme, because a BSP step *is* a barrier).
+
+The sweep is *variable-centric* (gather form): each variable reduces over
+the candidate bounds of all its occurrences.  Associativity/commutativity
+of ⊔ makes this equal to the propagator-centric scatter form
+(`kernels/ref.py` oracle), which is itself equal to any fair sequential
+chaotic iteration by the paper's Prop. 3 / Thm. 6 — both equalities are
+property-tested in `tests/test_semantics.py`.
+
+Propagator semantics for row  b ⇔ Σ_j a_j·x_j ≤ c :
+
+  ask  lb(b) ≥ 1  (b told true):   for each term k,
+       slack_k = c - (Smin - min(a_k x_k));
+       a_k > 0 → tell x_k ≤ ⌊slack_k / a_k⌋
+       a_k < 0 → tell x_k ≥ ⌈slack_k / a_k⌉
+  ask  ub(b) ≤ 0  (b told false):  propagate Σ -a_j x_j ≤ -c-1 (negation)
+  entailment:   Smax ≤ c  → tell b ≥ 1  ;  Smin > c → tell b ≤ 0
+       (paper's `entailed` function, via Lemma 1 monotonicity)
+
+Candidates are clamped into the initial box (see compile.py) so all
+arithmetic provably stays in dtype range.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.compile import CompiledModel
+
+
+def _neutrals(dtype):
+    big = jnp.asarray(jnp.iinfo(dtype).max // 4, dtype)
+    return big, -big   # NEU_UB, NEU_LB
+
+
+def _fdiv(p, q):
+    return jnp.floor_divide(p, q)
+
+
+def _cdiv(p, q):
+    return -jnp.floor_divide(-p, q)
+
+
+def propagator_candidates(cm: CompiledModel, lb: jax.Array, ub: jax.Array
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """All tells of one sweep, as candidate bounds per (prop, slot).
+
+    Returns (cand_lb, cand_ub), each ``[P+1, K+1]``; slot K is the
+    reified-boolean (entailment) slot.  Neutral candidates are ±big so they
+    vanish under the min/max joins.  Shared by the gather sweep, the
+    scatter oracle and the sequential baseline — there is exactly one
+    implementation of the propagator math.
+    """
+    a = cm.coef                     # [P1, K]
+    v = cm.vidx
+    c = cm.rhs                      # [P1]
+    xl = lb[v]
+    xu = ub[v]
+    tl = jnp.where(a > 0, a * xl, a * xu)     # min of a_k x_k (0 when a==0)
+    tu = jnp.where(a > 0, a * xu, a * xl)     # max of a_k x_k
+    smin = tl.sum(-1)
+    smax = tu.sum(-1)
+
+    btrue = (lb[cm.bidx] >= 1)[:, None]       # ask b
+    bfalse = (ub[cm.bidx] <= 0)[:, None]      # ask ¬b
+
+    neu_ub, neu_lb = _neutrals(cm.jdtype)
+    safe_a = jnp.where(a == 0, 1, a)
+
+    # direction 1: Σ a x ≤ c (guard: b true)
+    slack1 = c[:, None] - (smin[:, None] - tl)
+    ub1 = jnp.where((a > 0) & btrue, _fdiv(slack1, safe_a), neu_ub)
+    lb1 = jnp.where((a < 0) & btrue, _cdiv(slack1, safe_a), neu_lb)
+
+    # direction 2: Σ -a x ≤ -c-1 (guard: b false); with a' = -a:
+    #   min(a' x) = -max(a x) = -tu ;  S'min = -smax
+    na = -a
+    safe_na = jnp.where(na == 0, 1, na)
+    slack2 = (-c - 1)[:, None] - (-smax[:, None] + tu)
+    ub2 = jnp.where((na > 0) & bfalse, _fdiv(slack2, safe_na), neu_ub)
+    lb2 = jnp.where((na < 0) & bfalse, _cdiv(slack2, safe_na), neu_lb)
+
+    term_ub = jnp.minimum(ub1, ub2)           # [P1, K]
+    term_lb = jnp.maximum(lb1, lb2)
+
+    # entailment slot (tells on the reified boolean)
+    one = jnp.asarray(1, cm.jdtype)
+    zero = jnp.asarray(0, cm.jdtype)
+    reif_lb = jnp.where(smax <= c, one, neu_lb)    # entailed  → b ≥ 1
+    reif_ub = jnp.where(smin > c, zero, neu_ub)    # disentail → b ≤ 0
+
+    cand_ub = jnp.concatenate([term_ub, reif_ub[:, None]], axis=1)
+    cand_lb = jnp.concatenate([term_lb, reif_lb[:, None]], axis=1)
+    return cand_lb, cand_ub
+
+
+def sweep(cm: CompiledModel, lb: jax.Array, ub: jax.Array
+          ) -> Tuple[jax.Array, jax.Array]:
+    """One parallel iteration: D(P₁) ⊔ … ⊔ D(Pₙ) applied to (lb, ub).
+
+    Gather form: variable v reduces over its occurrence list — no scatter,
+    no atomics, deterministic by construction.
+    """
+    cand_lb, cand_ub = propagator_candidates(cm, lb, ub)
+    g_ub = cand_ub[cm.occ_prop, cm.occ_slot].min(-1)   # [V]
+    g_lb = cand_lb[cm.occ_prop, cm.occ_slot].max(-1)
+    # clamp candidates into the initial box (overflow guard; sound because
+    # box_lo-1/box_hi+1 still cross the opposite bound on failure)
+    g_ub = jnp.maximum(g_ub, cm.box_lo)
+    g_lb = jnp.minimum(g_lb, cm.box_hi)
+    return jnp.maximum(lb, g_lb), jnp.minimum(ub, g_ub)
+
+
+def sweep_scatter(cm: CompiledModel, lb: jax.Array, ub: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Propagator-centric scatter form of the same sweep (oracle).
+
+    This is literally "each propagator writes its variables through an
+    atomic join" — the paper's load/store formulation — except the joins
+    are XLA scatter-min/max, which are deterministic regardless of
+    duplicate indices (associative reduce).  Used as the reference the
+    gather sweep and the Pallas kernel are tested against.
+    """
+    cand_lb, cand_ub = propagator_candidates(cm, lb, ub)
+    tgt = jnp.concatenate([cm.vidx, cm.bidx[:, None]], axis=1)  # [P1, K+1]
+    flat_v = tgt.reshape(-1)
+    new_ub = ub.at[flat_v].min(jnp.maximum(cand_ub.reshape(-1), cm.box_lo[flat_v]))
+    new_lb = lb.at[flat_v].max(jnp.minimum(cand_lb.reshape(-1), cm.box_hi[flat_v]))
+    return new_lb, new_ub
+
+
+@partial(jax.jit, static_argnames=("max_iters", "stop_on_fail", "use_scatter"))
+def fixpoint(cm: CompiledModel, lb: jax.Array, ub: jax.Array,
+             max_iters: Optional[int] = None, stop_on_fail: bool = True,
+             use_scatter: bool = False):
+    """Run sweeps to the least fixed point (paper Thm. 2 guarantees
+    existence/uniqueness; finite lattices guarantee termination).
+
+    Returns (lb', ub', n_sweeps, converged).  `converged` is a per-store
+    flag: True iff the last sweep changed nothing (or the store failed —
+    failure is definitive).  With ``max_iters`` the loop may stop early
+    with converged=False; callers must then keep sweeping before trusting
+    all-fixed stores as solutions (search.py does — see §Perf H1).
+    With ``stop_on_fail`` the loop exits as soon as some domain empties
+    (failed stores are discarded by search — a beyond-paper early-exit).
+    """
+    step = sweep_scatter if use_scatter else sweep
+
+    def cond(st):
+        lb_, ub_, changed, it = st
+        ok = changed
+        if max_iters is not None:
+            ok = ok & (it < max_iters)
+        if stop_on_fail:
+            ok = ok & jnp.logical_not(jnp.any(lb_ > ub_))
+        return ok
+
+    def body(st):
+        lb_, ub_, _, it = st
+        nlb, nub = step(cm, lb_, ub_)
+        changed = jnp.any((nlb != lb_) | (nub != ub_))
+        return nlb, nub, changed, it + 1
+
+    init = (lb, ub, jnp.asarray(True), jnp.asarray(0, jnp.int32))
+    lb, ub, changed, iters = lax.while_loop(cond, body, init)
+    converged = jnp.logical_not(changed) | jnp.any(lb > ub)
+    return lb, ub, iters, converged
+
+
+# --------------------------------------------------------------------------
+# Sequential / chaotic iteration semantics — test-grade implementations of
+# the paper's `seq P` (Prop. 3) and fair schedules (Def. 5 / Thm. 6).
+# --------------------------------------------------------------------------
+
+def apply_one(cm: CompiledModel, lb, ub, p: jax.Array):
+    """Apply a single guarded command (SELECT rule) — one transition of ↪."""
+    cand_lb, cand_ub = propagator_candidates(cm, lb, ub)  # (cheap enough for tests)
+    row_ub, row_lb = cand_ub[p], cand_lb[p]
+    tgt = jnp.concatenate([cm.vidx[p], cm.bidx[p][None]])
+    new_ub = ub.at[tgt].min(jnp.maximum(row_ub, cm.box_lo[tgt]))
+    new_lb = lb.at[tgt].max(jnp.minimum(row_lb, cm.box_hi[tgt]))
+    return new_lb, new_ub
+
+
+def sequential_fixpoint(cm: CompiledModel, lb, ub, order=None,
+                        max_rounds: int = 10_000):
+    """fix D(seq P) under the schedule `order` (default: program order).
+
+    Python-loop driven; used only by tests to validate Prop. 3 / Thm. 6.
+    """
+    import numpy as np
+    order = list(range(cm.n_props)) if order is None else list(order)
+    lb = jnp.asarray(lb)
+    ub = jnp.asarray(ub)
+    for _ in range(max_rounds):
+        plb, pub = lb, ub
+        for p in order:
+            lb, ub = apply_one(cm, lb, ub, jnp.asarray(p))
+        if bool(jnp.all(lb == plb) & jnp.all(ub == pub)):
+            return np.asarray(lb), np.asarray(ub)
+    raise RuntimeError("sequential fixpoint did not converge")

@@ -1,0 +1,103 @@
+"""Lattice primitives (paper §"Parallel Concurrent Constraint Programming").
+
+PCCP stores are Cartesian products of chain lattices.  We materialize the
+integer-interval lattice ``IZ = ZInc × ZDec`` as two dense vectors
+
+    lb : i32[V]   -- element of ZInc^V   (join = elementwise max)
+    ub : i32[V]   -- element of ZDec^V   (join = elementwise min)
+
+Booleans (BInc/BDec) are embedded as intervals over {0, 1}:
+``lb == 1`` means *true is entailed*, ``ub == 0`` means *false is entailed*,
+``(0, 1)`` is unknown (bottom), ``lb > ub`` is top (failure).
+
+Pseudo-infinities: true ±inf does not exist on machine ints, so we use a
+sentinel ``INF`` chosen small enough that ``coef * bound`` products and
+K-term sums stay within the dtype (see ``compile.py`` for the checked
+bounds).  All joins clamp back into [-INF, INF].
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Pseudo-infinity for the default int32 build.  Invariant (checked at model
+# compile time): |coef| * INF_GUARD and K * max|term| must fit in the dtype.
+INF32 = np.int32(1 << 20)
+INF64 = np.int64(1 << 40)
+
+
+def inf_for(dtype) -> np.integer:
+    return INF64 if jnp.dtype(dtype).itemsize >= 8 else INF32
+
+
+# --- chain lattices -------------------------------------------------------
+
+def zinc_join(a, b):
+    """Join in ZInc (increasing integers): max."""
+    return jnp.maximum(a, b)
+
+
+def zdec_join(a, b):
+    """Join in ZDec = ZInc^op (decreasing integers): min."""
+    return jnp.minimum(a, b)
+
+
+def zinc_leq(a, b):
+    """a <= b in ZInc (i.e. b carries at least as much information)."""
+    return a <= b
+
+
+def zdec_leq(a, b):
+    return a >= b
+
+
+# --- interval lattice IZ = ZInc x ZDec ------------------------------------
+
+def iz_join(lb_a, ub_a, lb_b, ub_b):
+    """Pointwise join of two interval stores (Cartesian-product join)."""
+    return zinc_join(lb_a, lb_b), zdec_join(ub_a, ub_b)
+
+
+def iz_leq(lb_a, ub_a, lb_b, ub_b):
+    """(lb_a,ub_a) <= (lb_b,ub_b) in IZ: b is a sub-interval of a."""
+    return jnp.logical_and(lb_a <= lb_b, ub_a >= ub_b)
+
+
+def is_empty(lb, ub):
+    """Top of IZ per variable == failure (empty concretization)."""
+    return lb > ub
+
+
+def is_fixed(lb, ub):
+    return lb == ub
+
+
+def any_failed(lb, ub):
+    return jnp.any(is_empty(lb, ub))
+
+
+def all_fixed(lb, ub):
+    return jnp.all(is_fixed(lb, ub))
+
+
+def clamp(x, dtype):
+    inf = inf_for(dtype)
+    return jnp.clip(x, -inf, inf).astype(dtype)
+
+
+# --- boolean embedding -----------------------------------------------------
+
+def bool_true(lb, ub, idx):
+    """BInc view: lb[idx] >= 1 <=> `true` has been told."""
+    return lb[..., idx] >= 1
+
+
+def bool_false(lb, ub, idx):
+    return ub[..., idx] <= 0
+
+
+# --- host-side mirrors (used by the sequential baseline & tests) -----------
+
+def np_iz_join(lb_a, ub_a, lb_b, ub_b):
+    return np.maximum(lb_a, lb_b), np.minimum(ub_a, ub_b)

@@ -1,0 +1,246 @@
+"""Constraint model AST — the PCCP modelling layer (paper §PCCP).
+
+The paper's PCCP has three statements (ask / tell / parallel) plus a
+modelling layer with generators and a compilation function ⟦.⟧ from
+constraints to PCCP processes.  We mirror that split:
+
+* this module is the *modelling layer*: integer/boolean variables, linear
+  expressions and (reified) linear inequalities, with the paper's reified
+  conjunction/equivalence combinators;
+* ``compile.py`` is ⟦.⟧ — it lowers every constraint to *guarded commands*
+  in a dense tabular form (the guarded normal form of Prop. 4) executable
+  by the parallel fixpoint engine.
+
+Everything reduces to one propagator shape,
+
+    b  ⇔  Σ_j a_j · x_j  ≤  c        (ReifLinLe)
+
+with plain inequalities using the always-true variable as ``b``.  This is
+exactly the paper's indexical-style compilation: ask on the reif bool,
+tell interval tightenings; entailment per its `entailed` function.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# Variable 0 of every model is pinned to (1, 1) and acts as the constant
+# `true` of BInc; plain constraints are reified on it.
+TRUE_VAR = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class IntVar:
+    """Handle to a store index.  Arithmetic builds LinExpr; comparisons
+    build constraints (so models read like the paper's examples)."""
+
+    idx: int
+    model: "Model" = dataclasses.field(repr=False, compare=False)
+
+    # -- arithmetic sugar → LinExpr -------------------------------------
+    def _as_expr(self) -> "LinExpr":
+        return LinExpr({self.idx: 1}, 0)
+
+    def __add__(self, other):
+        return self._as_expr() + other
+
+    __radd__ = __add__
+
+    def __sub__(self, other):
+        return self._as_expr() - other
+
+    def __rsub__(self, other):
+        return (-1 * self._as_expr()) + other
+
+    def __mul__(self, k: int):
+        return self._as_expr() * k
+
+    __rmul__ = __mul__
+
+    def __neg__(self):
+        return self._as_expr() * -1
+
+    def __le__(self, other):
+        return self._as_expr() <= other
+
+    def __ge__(self, other):
+        return self._as_expr() >= other
+
+    def __lt__(self, other):
+        return self._as_expr() < other
+
+    def __gt__(self, other):
+        return self._as_expr() > other
+
+    def eq(self, other):
+        return self._as_expr().eq(other)
+
+
+@dataclasses.dataclass
+class LinExpr:
+    """Σ coef_i · x_i + const, over store indices."""
+
+    terms: Dict[int, int]
+    const: int = 0
+
+    @staticmethod
+    def of(x) -> "LinExpr":
+        if isinstance(x, LinExpr):
+            return LinExpr(dict(x.terms), x.const)
+        if isinstance(x, IntVar):
+            return LinExpr({x.idx: 1}, 0)
+        if isinstance(x, (int,)):
+            return LinExpr({}, int(x))
+        raise TypeError(f"cannot coerce {type(x)} to LinExpr")
+
+    def __add__(self, other):
+        o = LinExpr.of(other)
+        t = dict(self.terms)
+        for v, c in o.terms.items():
+            t[v] = t.get(v, 0) + c
+        return LinExpr({v: c for v, c in t.items() if c != 0},
+                       self.const + o.const)
+
+    __radd__ = __add__
+
+    def __sub__(self, other):
+        return self + (LinExpr.of(other) * -1)
+
+    def __rsub__(self, other):
+        return LinExpr.of(other) + (self * -1)
+
+    def __mul__(self, k: int):
+        k = int(k)
+        return LinExpr({v: c * k for v, c in self.terms.items() if c * k != 0},
+                       self.const * k)
+
+    __rmul__ = __mul__
+
+    def __neg__(self):
+        return self * -1
+
+    # -- comparisons → LinLe --------------------------------------------
+    def __le__(self, other) -> "LinLe":
+        d = self - other            # d <= 0
+        return LinLe(tuple(sorted(d.terms.items())), -d.const)
+
+    def __ge__(self, other) -> "LinLe":
+        return LinExpr.of(other) <= self
+
+    def __lt__(self, other) -> "LinLe":
+        return self <= (LinExpr.of(other) - 1)
+
+    def __gt__(self, other) -> "LinLe":
+        return self >= (LinExpr.of(other) + 1)
+
+    def eq(self, other) -> List["LinLe"]:
+        return [self <= other, self >= other]
+
+
+@dataclasses.dataclass(frozen=True)
+class LinLe:
+    """Σ a_j x_j ≤ c  (terms sorted by var index, coefficients nonzero)."""
+
+    terms: Tuple[Tuple[int, int], ...]   # ((var, coef), ...)
+    rhs: int
+
+    def negated(self) -> "LinLe":
+        """¬(Σ a x ≤ c)  ≡  Σ -a x ≤ -c - 1."""
+        return LinLe(tuple((v, -c) for v, c in self.terms), -self.rhs - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReifLinLe:
+    """b ⇔ (Σ a_j x_j ≤ c).  The single propagator shape of the engine."""
+
+    bvar: int
+    lin: LinLe
+
+
+class Model:
+    """A PCCP model: local statements (∃x:IZ) + parallel constraint tells."""
+
+    def __init__(self, name: str = "model", dtype_bits: int = 32):
+        self.name = name
+        self.dtype_bits = dtype_bits
+        self.lb0: List[int] = []
+        self.ub0: List[int] = []
+        self.names: List[str] = []
+        self.props: List[ReifLinLe] = []
+        self.objective: Optional[int] = None      # var index to minimize
+        self.branch_order: List[int] = []         # decision vars, in order
+        # var 0 == constant true
+        t = self._new_var(1, 1, "TRUE")
+        assert t.idx == TRUE_VAR
+
+    # -- local statements (∃x : IZ, ...) ---------------------------------
+    def _new_var(self, lo: int, hi: int, name: str) -> IntVar:
+        self.lb0.append(int(lo))
+        self.ub0.append(int(hi))
+        self.names.append(name)
+        return IntVar(len(self.lb0) - 1, self)
+
+    def int_var(self, lo: int, hi: int, name: str = "") -> IntVar:
+        if lo > hi:
+            raise ValueError(f"empty initial domain for {name}: ({lo},{hi})")
+        return self._new_var(lo, hi, name or f"x{len(self.lb0)}")
+
+    def bool_var(self, name: str = "") -> IntVar:
+        return self._new_var(0, 1, name or f"b{len(self.lb0)}")
+
+    @property
+    def n_vars(self) -> int:
+        return len(self.lb0)
+
+    # -- tells (constraint posting) ---------------------------------------
+    def add(self, c) -> None:
+        """Post a constraint (or a list of them — e.g. from ``eq``)."""
+        if isinstance(c, list):
+            for ci in c:
+                self.add(ci)
+        elif isinstance(c, LinLe):
+            if not c.terms:               # constant constraint
+                if 0 > c.rhs:             # trivially false: post 1 <= 0 on TRUE
+                    self.props.append(ReifLinLe(
+                        TRUE_VAR, LinLe(((TRUE_VAR, 1),), 0)))
+                return
+            self.props.append(ReifLinLe(TRUE_VAR, c))
+        elif isinstance(c, ReifLinLe):
+            self.props.append(c)
+        else:
+            raise TypeError(f"cannot post {type(c)}")
+
+    def reify(self, lin: LinLe, name: str = "") -> IntVar:
+        """∃b:BInc, ⟦b ⇔ lin⟧ — returns b."""
+        b = self.bool_var(name or "reif")
+        self.props.append(ReifLinLe(b.idx, lin))
+        return b
+
+    def iff(self, b: IntVar, lin: LinLe) -> None:
+        """⟦b ⇔ lin⟧ for an existing boolean b (paper's ⇔ compilation:
+        ask-entailed / ask-disentailed in both directions — realized by the
+        single reified propagator which implements all four asks)."""
+        self.props.append(ReifLinLe(b.idx, lin))
+
+    def iff_and(self, b: IntVar, lins: Sequence[LinLe]) -> None:
+        """⟦b ⇔ (φ₁ ∧ ... ∧ φ_m)⟧ via the standard decomposition
+        bᵢ ⇔ φᵢ  ∥  b ⇔ ∧ bᵢ  (the conjunction itself compiles to linear:
+        b ≤ bᵢ and b ≥ Σ bᵢ - (m-1))."""
+        bs = [self.reify(l, name=f"{self.names[b.idx]}&{i}")
+              for i, l in enumerate(lins)]
+        for bi in bs:
+            self.add(b <= bi)                       # b → bᵢ
+        self.add(sum(bs, LinExpr({}, 0)) - (len(bs) - 1) <= b)  # ∧bᵢ → b
+
+    # -- search / objective ------------------------------------------------
+    def minimize(self, v: IntVar) -> None:
+        self.objective = v.idx
+
+    def branch_on(self, vs: Sequence[IntVar]) -> None:
+        self.branch_order = [v.idx for v in vs]
+
+    # -- ⟦.⟧ ---------------------------------------------------------------
+    def compile(self, **kw):
+        from repro.core.compile import compile_model
+        return compile_model(self, **kw)

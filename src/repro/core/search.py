@@ -1,0 +1,296 @@
+"""Batched propagate-and-search (paper §TURBO).
+
+A *lane* is the TPU analogue of a TURBO CUDA block: it owns one EPS
+subproblem at a time and runs depth-first search on it.  Lanes are a batch
+axis (`vmap`), sharded over mesh devices by the engine.
+
+Per the paper's design choices, faithfully kept:
+  * two stores per lane: the subproblem **root** store and the current
+    store; backtracking copies the root and re-commits the decision path
+    (full recomputation, no trail).  Because decisions are `tell`s (joins),
+    the whole path is re-joined in one scatter and then a single fixpoint
+    runs — recomputation is one propagation, not depth many;
+  * eventless propagation (fixpoint.py) — every propagator, every sweep;
+  * branch & bound through a shared best objective (global-memory cell in
+    the paper; a cross-lane min + `lax.pmin` here).
+
+Branching is (var, m) with left = `x ≤ m`, right = `x ≥ m+1`; value
+strategies: `m = lb` (assign-min, the scheduling default) or the domain
+midpoint (split).  Variable strategies: input order / min domain / min lb.
+
+All control flow is mask-based so the step function vmaps; a lane that is
+`done` keeps sweeping its converged store, which is a no-op by
+idempotence (Thm. 2) — correctness never depends on lane divergence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.compile import CompiledModel
+from repro.core.fixpoint import fixpoint
+
+# variable-selection strategies
+INPUT_ORDER = "input_order"
+MIN_DOM = "min_dom"
+MIN_LB = "min_lb"
+
+# sentinel: lane has no assigned subproblem (shared-queue dispatch)
+UNASSIGNED = np.iinfo(np.int32).max // 2
+# value-selection strategies
+VAL_MIN = "min"       # m = lb  (assign lower bound)
+VAL_SPLIT = "split"   # m = (lb+ub)//2
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchOptions:
+    var_strategy: str = INPUT_ORDER
+    val_strategy: str = VAL_MIN
+    max_depth: int = 2048
+    max_fixpoint_iters: Optional[int] = None
+    stop_on_first: bool = False      # satisfaction: stop at first solution
+
+
+class LaneState(NamedTuple):
+    # current + root stores (the paper's two stores per block)
+    lb: jax.Array            # i[V]
+    ub: jax.Array            # i[V]
+    root_lb: jax.Array       # i[V]
+    root_ub: jax.Array       # i[V]
+    # decision path
+    dec_var: jax.Array       # i32[MD]
+    dec_val: jax.Array       # i[MD]   branch point m
+    dec_flip: jax.Array      # bool[MD] True once on the right branch
+    depth: jax.Array         # i32
+    # subproblem queue cursor (static round-robin over the shard)
+    next_sub: jax.Array      # i32
+    fresh: jax.Array         # bool — needs to load a new subproblem
+    done: jax.Array          # bool — queue exhausted
+    incomplete: jax.Array    # bool — hit depth limit (search not exhaustive)
+    # incumbent
+    best_obj: jax.Array      # i
+    best_sol: jax.Array      # i[V]
+    has_sol: jax.Array       # bool
+    # stats
+    n_nodes: jax.Array       # i32
+    n_fails: jax.Array       # i64
+    n_sols: jax.Array        # i64
+    n_sweeps: jax.Array      # i64
+
+
+def init_lanes(cm: CompiledModel, n_lanes: int, opts: SearchOptions) -> LaneState:
+    V = cm.n_vars
+    dt = cm.jdtype
+    big = jnp.asarray(jnp.iinfo(dt).max // 4, dt)
+    z = lambda *s: jnp.zeros(s, jnp.int32)  # noqa: E731
+    return LaneState(
+        lb=jnp.zeros((n_lanes, V), dt), ub=jnp.zeros((n_lanes, V), dt),
+        root_lb=jnp.zeros((n_lanes, V), dt), root_ub=jnp.zeros((n_lanes, V), dt),
+        dec_var=jnp.zeros((n_lanes, opts.max_depth), jnp.int32),
+        dec_val=jnp.zeros((n_lanes, opts.max_depth), dt),
+        dec_flip=jnp.zeros((n_lanes, opts.max_depth), bool),
+        depth=jnp.zeros((n_lanes,), jnp.int32),
+        next_sub=jnp.full((n_lanes,), UNASSIGNED, jnp.int32),
+        fresh=jnp.ones((n_lanes,), bool),
+        done=jnp.zeros((n_lanes,), bool),
+        incomplete=jnp.zeros((n_lanes,), bool),
+        best_obj=jnp.full((n_lanes,), big, dt),
+        best_sol=jnp.zeros((n_lanes, V), dt),
+        has_sol=jnp.zeros((n_lanes,), bool),
+        n_nodes=z(n_lanes), n_fails=z(n_lanes), n_sols=z(n_lanes),
+        n_sweeps=z(n_lanes),
+    )
+
+
+def dispatch_pool(st: LaneState, pool_head, n_subs: int):
+    """Shared per-device subproblem queue (the paper's dynamic EPS):
+    fresh lanes pop the next pool indices; when the pool is drained they
+    are marked done.  Replaces static round-robin — no straggler lane can
+    sit on a long private queue while others idle."""
+    want = st.fresh & ~st.done & (st.next_sub >= n_subs)
+    rank = jnp.cumsum(want.astype(jnp.int32)) - 1
+    idx = pool_head + rank
+    got = want & (idx < n_subs)
+    next_sub = jnp.where(got, idx.astype(jnp.int32), st.next_sub)
+    done = st.done | (want & (idx >= n_subs))
+    new_head = jnp.minimum(pool_head + want.astype(jnp.int32).sum(),
+                           n_subs)
+    return st._replace(next_sub=next_sub, done=done), new_head
+
+
+def _apply_path(cm: CompiledModel, root_lb, root_ub, dec_var, dec_val,
+                dec_flip, depth):
+    """Full recomputation: root ⊔ all decision tells, in one scatter."""
+    md = dec_var.shape[0]
+    lvl = jnp.arange(md)
+    on = lvl < depth
+    dt = cm.jdtype
+    big = jnp.asarray(jnp.iinfo(dt).max // 4, dt)
+    ub_tell = jnp.where(on & ~dec_flip, dec_val, big)           # left: x ≤ m
+    lb_tell = jnp.where(on & dec_flip, dec_val + 1, -big)       # right: x ≥ m+1
+    ub = root_ub.at[dec_var].min(ub_tell)
+    lb = root_lb.at[dec_var].max(lb_tell)
+    return lb, ub
+
+
+def _select_branch(cm: CompiledModel, lb, ub, opts: SearchOptions):
+    """Pick (var, m) for the next decision. Returns (var, m, any_unfixed)."""
+    bv = cm.branch_vars
+    blb, bub = lb[bv], ub[bv]
+    unfixed = blb < bub
+    width = bub - blb
+    big = jnp.iinfo(cm.jdtype).max // 4
+    if opts.var_strategy == INPUT_ORDER:
+        pos = jnp.argmax(unfixed)                   # first True
+    elif opts.var_strategy == MIN_DOM:
+        pos = jnp.argmin(jnp.where(unfixed, width, big))
+    elif opts.var_strategy == MIN_LB:
+        pos = jnp.argmin(jnp.where(unfixed, blb, big))
+    else:
+        raise ValueError(opts.var_strategy)
+    var = bv[pos]
+    if opts.val_strategy == VAL_MIN:
+        m = lb[var]
+    elif opts.val_strategy == VAL_SPLIT:
+        m = (lb[var] + ub[var]) // 2
+    else:
+        raise ValueError(opts.val_strategy)
+    return var, m, jnp.any(unfixed)
+
+
+def lane_step(cm: CompiledModel, subs_lb, subs_ub, n_lanes: int,
+              opts: SearchOptions, st: LaneState, gbest) -> LaneState:
+    """One superstep of one lane: load / propagate / record / backtrack-or-branch.
+
+    `subs_lb/ub`: the device-local subproblem pool [S, V]; lane i consumes
+    subproblems i, i+n_lanes, … (the paper's static EPS assignment).
+    `gbest`: scalar global incumbent bound (already cross-lane/device min'd).
+    """
+    S = subs_lb.shape[0]
+    dt = cm.jdtype
+    big = jnp.asarray(jnp.iinfo(dt).max // 4, dt)
+
+    # -- 1. load the dispatcher-assigned subproblem when fresh -------------
+    # (assignment happens in dispatch_pool — the shared per-device queue,
+    #  TURBO's dynamic EPS; `done` is also decided there)
+    can_load = st.next_sub < S
+    load = st.fresh & can_load
+    sub = jnp.clip(st.next_sub, 0, S - 1)
+    root_lb = jnp.where(load, subs_lb[sub], st.root_lb)
+    root_ub = jnp.where(load, subs_ub[sub], st.root_ub)
+    lb = jnp.where(load, root_lb, st.lb)
+    ub = jnp.where(load, root_ub, st.ub)
+    depth = jnp.where(load, 0, st.depth)
+    next_sub = jnp.where(load, UNASSIGNED, st.next_sub)  # consumed
+    done = st.done
+    fresh = st.fresh & ~load & ~done
+    active = ~done & ~fresh
+
+    # -- 2. branch & bound tell + propagate to fixpoint --------------------
+    if cm.obj_var >= 0:
+        inc = jnp.minimum(gbest, st.best_obj)      # global ⊓ own incumbent
+        bound = jnp.where(inc < big, inc - 1, big)
+        ub = ub.at[cm.obj_var].min(jnp.where(active, bound, big))
+    lb, ub, sweeps, converged = fixpoint(cm, lb, ub,
+                                         max_iters=opts.max_fixpoint_iters)
+
+    failed = jnp.any(lb > ub)
+    # a fully-fixed store is only a SOLUTION at a (per-lane) fixed point:
+    # with capped sweeps (§Perf H1), unconverged lanes keep propagating on
+    # the next superstep instead of branching/recording (soundness guard).
+    solved = active & converged & ~failed & jnp.all(lb == ub)
+    failed = active & failed
+
+    # a node = one propagate-to-completion event (failed counts; an
+    # unconverged capped superstep is a partial node, not counted)
+    n_nodes = st.n_nodes + (failed | (active & converged)).astype(jnp.int32)
+    n_fails = st.n_fails + failed.astype(jnp.int32)
+    n_sols = st.n_sols + solved.astype(jnp.int32)
+    n_sweeps = st.n_sweeps + jnp.asarray(sweeps, jnp.int32)
+
+    # -- 3. record incumbent ------------------------------------------------
+    if cm.obj_var >= 0:
+        better = solved & (lb[cm.obj_var] < st.best_obj)
+    else:
+        better = solved & ~st.has_sol
+    best_obj = jnp.where(better, lb[cm.obj_var] if cm.obj_var >= 0 else big,
+                         st.best_obj)
+    best_sol = jnp.where(better, lb, st.best_sol)
+    has_sol = st.has_sol | solved
+
+    # -- 4. backtrack or branch ---------------------------------------------
+    bt = failed | solved
+    lvl = jnp.arange(opts.max_depth)
+    open_mask = (~st.dec_flip) & (lvl < depth)
+    has_open = jnp.any(open_mask)
+    bt_level = jnp.max(jnp.where(open_mask, lvl, -1))
+    exhausted = active & bt & ~has_open
+
+    do_bt = active & bt & has_open
+    # pop everything deeper than bt_level, flip bt_level to its right branch
+    dec_flip = jnp.where(
+        do_bt,
+        (st.dec_flip & (lvl < bt_level)) | (lvl == bt_level),
+        st.dec_flip)
+    depth_bt = bt_level + 1
+
+    # full recomputation for backtracking lanes
+    rlb, rub = _apply_path(cm, root_lb, root_ub, st.dec_var, st.dec_val,
+                           dec_flip, depth_bt)
+
+    # branching lanes (only at per-lane fixed points: unconverged lanes
+    # do nothing this superstep and propagate further on the next)
+    var, m, any_unfixed = _select_branch(cm, lb, ub, opts)
+    do_branch = active & ~bt & converged & any_unfixed
+    overflow = do_branch & (depth >= opts.max_depth)
+    do_branch = do_branch & ~overflow
+    dec_var = jnp.where(do_branch,
+                        st.dec_var.at[jnp.clip(depth, 0, opts.max_depth - 1)]
+                        .set(var.astype(jnp.int32)), st.dec_var)
+    dec_val = jnp.where(do_branch,
+                        st.dec_val.at[jnp.clip(depth, 0, opts.max_depth - 1)]
+                        .set(m), st.dec_val)
+    dec_flip = jnp.where(do_branch,
+                         dec_flip.at[jnp.clip(depth, 0, opts.max_depth - 1)]
+                         .set(False), dec_flip)
+    blb, bub = lb, ub.at[var].min(jnp.where(do_branch, m, big))  # left: x ≤ m
+
+    # -- 5. commit per-lane outcome ------------------------------------------
+    new_lb = jnp.where(do_bt, rlb, blb)
+    new_ub = jnp.where(do_bt, rub, bub)
+    new_depth = jnp.where(do_bt, depth_bt,
+                          jnp.where(do_branch, depth + 1, depth))
+    fresh = fresh | exhausted | overflow
+    incomplete = st.incomplete | overflow
+
+    return LaneState(
+        lb=new_lb, ub=new_ub, root_lb=root_lb, root_ub=root_ub,
+        dec_var=dec_var, dec_val=dec_val, dec_flip=dec_flip,
+        depth=new_depth, next_sub=next_sub, fresh=fresh, done=done,
+        incomplete=incomplete, best_obj=best_obj, best_sol=best_sol,
+        has_sol=has_sol, n_nodes=n_nodes, n_fails=n_fails, n_sols=n_sols,
+        n_sweeps=n_sweeps)
+
+
+def lanes_step(cm: CompiledModel, subs_lb, subs_ub, opts: SearchOptions,
+               st: LaneState, gbest) -> LaneState:
+    """vmap of lane_step over the lane axis (shared tables broadcast)."""
+    n_lanes = st.depth.shape[0]
+    f = partial(lane_step, cm, subs_lb, subs_ub, n_lanes, opts)
+    return jax.vmap(f, in_axes=(0, None))(st, gbest)
+
+
+def lanes_best(st: LaneState, dt):
+    """Cross-lane incumbent (the shared global-memory bound of the paper)."""
+    return jnp.min(st.best_obj)
+
+
+def all_done(st: LaneState) -> jax.Array:
+    return jnp.all(st.done)

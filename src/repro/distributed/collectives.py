@@ -1,0 +1,75 @@
+"""Collective helpers: compressed gradient all-reduce + overlap notes.
+
+`int8_psum_mean` implements the standard 1-byte gradient compression for
+cross-pod data parallelism: per-tensor symmetric int8 quantization with a
+psum-max shared scale, integer all-reduce, dequantize.  4× less ICI
+traffic than f32 (2× vs bf16) on the pod axis, with bounded error
+(≤ scale/2 per element before averaging; the test asserts it).
+
+Intended placement (multi-pod training): within-pod reductions stay
+exact (pjit-inserted, high-bandwidth ICI); only the *pod* axis — the
+slow DCN/optical hop on a real 2-pod system — uses compression:
+
+    grads = pod_sync_grads(grads, axis="pod", compress=True)
+
+Overlap: XLA's latency-hiding scheduler already interleaves the
+per-layer FSDP all-gathers with compute inside the scan (visible in the
+dry-run HLO as async-start/done pairs on TPU); nothing manual needed for
+the baseline.  The explicit shard_map region here is for the pod hop
+that pjit would otherwise fold into one big synchronous reduce.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def int8_psum_mean(x: jax.Array, axis_name: str) -> jax.Array:
+    """Mean over `axis_name` with int8-compressed payload.
+
+    Scale is the psum-max of |x| so every participant quantizes into the
+    same grid (required for exact integer summation semantics).
+    """
+    absmax = lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    scale = jnp.maximum(absmax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    # sum in int32 (n ≤ 2^24 participants fits easily)
+    s = lax.psum(q.astype(jnp.int32), axis_name)
+    n = lax.psum(jnp.ones((), jnp.int32), axis_name)
+    return (s.astype(jnp.float32) * scale) / n.astype(jnp.float32)
+
+
+def psum_mean(x: jax.Array, axis_name: str) -> jax.Array:
+    n = lax.psum(jnp.ones((), x.dtype), axis_name)
+    return lax.psum(x, axis_name) / n
+
+
+def pod_sync_grads(grads: Dict, mesh, axis: str = "pod",
+                   compress: bool = True, specs=None) -> Dict:
+    """Average a grad pytree across the `axis` mesh dimension.
+
+    `specs` (pytree of PartitionSpec, default fully-replicated) describes
+    how each leaf is laid out over the *other* mesh axes; only the pod
+    replica dimension is reduced.  With `compress`, payloads cross the
+    pod link as int8.
+    """
+    if axis not in mesh.shape:
+        return grads
+    op = int8_psum_mean if compress else psum_mean
+    P_ = jax.sharding.PartitionSpec
+
+    def sync_leaf(g, spec):
+        fn = jax.shard_map(
+            partial(op, axis_name=axis),
+            mesh=mesh, in_specs=spec, out_specs=spec,
+            check_vma=False)
+        return fn(g).astype(g.dtype)
+
+    if specs is None:
+        specs = jax.tree.map(lambda _: P_(), grads)
+    return jax.tree.map(sync_leaf, grads, specs)

@@ -1,0 +1,111 @@
+"""Constraint-based distributed planning — PCCP inside the LM framework.
+
+The paper's contribution (a deterministic parallel constraint solver) is
+used here as the framework's *planning engine*:
+
+1. `plan_partition` — layer → pipeline-stage assignment: contiguous
+   partition of L layers into P stages minimizing the bottleneck stage
+   cost under a per-stage memory cap.  Modelled with monotone stage
+   indices g_i (g_i ≤ g_{i+1} ≤ g_i + 1) and reified membership booleans
+   b_{ik} ⇔ (g_i = k) — all lowered to the same reified-linear propagators
+   as RCPSP.
+
+2. `schedule_microbatches` — pipeline round scheduling IS an RCPSP: tasks
+   are (microbatch, stage) pairs, precedence (m,s) ≪ (m,s+1), each stage
+   is a unit-capacity renewable resource.  The solver's min-makespan
+   schedule reproduces 1F1B-style interleaving without hand-coding it.
+
+Both run on the exact engine validated against the paper (core/engine.py),
+so planning inherits its determinism guarantees (Thm 6): every host
+computes the same plan from the same inputs — no coordinator needed.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import engine
+from repro.core import search as S
+from repro.core.model import Model
+from repro.core.models import rcpsp
+
+
+def plan_partition(layer_costs: Sequence[int], layer_mems: Sequence[int],
+                   n_stages: int, mem_cap: int,
+                   timeout_s: float = 60.0) -> Tuple[List[int], int]:
+    """Contiguous layer→stage assignment minimizing the max stage cost.
+
+    Returns (stage_of_layer, bottleneck_cost). Raises if infeasible.
+    """
+    L, P = len(layer_costs), n_stages
+    m = Model("partition")
+    g = [m.int_var(0, P - 1, f"g{i}") for i in range(L)]
+    m.add(g[0] <= 0)                       # first layer in stage 0
+    m.add(g[L - 1] >= P - 1)               # last layer in the last stage
+    for i in range(L - 1):
+        m.add(g[i] <= g[i + 1])            # monotone
+        m.add(g[i + 1] <= g[i] + 1)        # contiguous, no empty stages
+    T = m.int_var(max(layer_costs), int(sum(layer_costs)), "T")
+    b = [[None] * P for _ in range(L)]
+    for i in range(L):
+        for k in range(P):
+            bik = m.bool_var(f"b{i}_{k}")
+            b[i][k] = bik
+            m.iff_and(bik, [g[i] <= k, -g[i] <= -k])    # b ⇔ (g_i == k)
+    for k in range(P):
+        m.add(sum(int(layer_costs[i]) * b[i][k] for i in range(L)) <= T)
+        m.add(sum(int(layer_mems[i]) * b[i][k] for i in range(L))
+              <= int(mem_cap))
+    m.minimize(T)
+    m.branch_on(g + [T])
+    res = engine.solve(m.compile(), n_lanes=16, n_subproblems=64,
+                       opts=S.SearchOptions(var_strategy=S.INPUT_ORDER,
+                                            max_depth=1024),
+                       timeout_s=timeout_s)
+    if res.solution is None:
+        raise ValueError(f"no feasible partition ({res.status}): "
+                         f"mem_cap={mem_cap} too tight?")
+    stages = [int(res.solution[v.idx]) for v in g]
+    return stages, int(res.objective)
+
+
+def schedule_microbatches(stage_costs: Sequence[int], n_microbatches: int,
+                          timeout_s: float = 60.0):
+    """Pipeline round schedule as RCPSP. Returns (start[m][s], makespan).
+
+    Tasks: (m, s) with duration stage_costs[s]; precedence (m,s)≪(m,s+1);
+    resource: one unit-capacity resource per stage.
+    """
+    Sn = len(stage_costs)
+    M = n_microbatches
+    n = M * Sn
+    tid = lambda mb, st: mb * Sn + st            # noqa: E731
+    dur = np.array([stage_costs[t % Sn] for t in range(n)], dtype=np.int64)
+    prec = [(tid(mb, st), tid(mb, st + 1))
+            for mb in range(M) for st in range(Sn - 1)]
+    usage = np.zeros((Sn, n), dtype=np.int64)
+    for t in range(n):
+        usage[t % Sn, t] = 1
+    cap = np.ones(Sn, dtype=np.int64)
+    inst = rcpsp.RCPSP(durations=dur, precedences=prec, usage=usage,
+                       capacity=cap, name=f"pipe-{Sn}x{M}")
+    model, handles = rcpsp.build_model(inst)
+    res = engine.solve(model.compile(), n_lanes=16, n_subproblems=64,
+                       opts=S.SearchOptions(var_strategy=S.MIN_LB,
+                                            max_depth=2048),
+                       timeout_s=timeout_s)
+    if res.solution is None:
+        raise RuntimeError(f"scheduler failed: {res.status}")
+    starts = [[int(res.solution[handles["s"][tid(mb, st)].idx])
+               for st in range(Sn)] for mb in range(M)]
+    return starts, int(res.objective), res
+
+
+def pipeline_efficiency(stage_costs: Sequence[int], makespan: int,
+                        n_microbatches: int) -> float:
+    """Schedule quality vs the pipeline lower bound
+    Σcosts + (M−1)·max — 1.0 means a perfectly packed pipeline."""
+    ideal = sum(stage_costs) + (n_microbatches - 1) * max(stage_costs)
+    return ideal / makespan if makespan else 0.0

@@ -1,0 +1,158 @@
+"""Logical-axis sharding rules → NamedShardings.
+
+Every parameter/cache/activation dimension carries a *logical* axis name
+(ParamSpec.axes, cache_axes below); a rule table maps logical names to
+mesh axes per execution mode.  `spec_for` drops any mapping that does not
+divide the concrete dimension (e.g. batch=1 in long_500k), so one rule
+table covers all 40 cells.
+
+train (ZeRO-3 + TP):            serve (TP + EP, no ZeRO gather latency):
+  batch  → (pod, data)            batch  → (pod, data) when divisible
+  embed  → data   (FSDP shard)    embed  → —       (params replicated
+  vocab  → model                  vocab  → model    across data; big-MoE
+  heads/kv/mlp → model            heads/kv/mlp → model  experts → data)
+  expert → —  (d/ff already       expert → data
+           sharded both ways)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Tuple[str, ...]]
+
+TRAIN_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "embed": ("data",),          # ZeRO-3/FSDP shard of every weight matrix
+    "heads": ("model",),
+    "kv": ("model",),
+    "mlp": ("model",),
+    "expert": (),
+    "layers": (),
+    "seq": (),
+    "kv_heads": (),
+    "head_dim": (),
+}
+
+SERVE_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "embed": (),                 # replicated: no per-layer gather at decode
+    "heads": ("model",),
+    "kv": ("model",),
+    "mlp": ("model",),
+    "expert": ("data",),         # big-MoE weights: expert-parallel rows
+    "layers": (),
+    "seq": (),
+    "kv_heads": ("model",),
+    "head_dim": (),
+}
+
+
+def rules_for(mode: str) -> Rules:
+    return TRAIN_RULES if mode == "train" else SERVE_RULES
+
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+             rules: Rules, mesh: Mesh) -> P:
+    """PartitionSpec with divisibility-checked axis assignment."""
+    entries = []
+    used = set()
+    for dim, ax in zip(shape, axes):
+        mesh_axes = tuple(a for a in rules.get(ax or "", ())
+                          if a in mesh.shape and a not in used)
+        size = int(np.prod([mesh.shape[a] for a in mesh_axes])) \
+            if mesh_axes else 1
+        if mesh_axes and dim % size == 0 and dim > 0:
+            entries.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+            used.update(mesh_axes)
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def shardings_for_specs(param_specs, rules: Rules, mesh: Mesh):
+    """{path: NamedSharding} for a ParamSpec dict."""
+    return {k: NamedSharding(mesh, spec_for(s.shape, s.axes, rules, mesh))
+            for k, s in param_specs.items()}
+
+
+def sharding_for_tree(shapes_tree, axes_tree, rules: Rules, mesh: Mesh):
+    """NamedShardings for an arbitrary (shapes, axes) pytree pair."""
+    return jax.tree.map(
+        lambda sh, ax: NamedSharding(mesh, spec_for(sh, ax, rules, mesh)),
+        shapes_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(i, (int, str, type(None))) for i in x))
+
+
+def batch_sharding(batch_tree, rules: Rules, mesh: Mesh):
+    """Inputs: dim 0 = batch, rest unsharded."""
+    def one(x):
+        shape = x.shape
+        axes = ("batch",) + (None,) * (len(shape) - 1)
+        return NamedSharding(mesh, spec_for(shape, axes, rules, mesh))
+    return jax.tree.map(one, batch_tree)
+
+
+# -- cache shardings (field-name keyed; mirrors nn/model.py structures) -----
+
+CACHE_RULES_SERVE: Rules = {
+    **SERVE_RULES,
+    # latent/feature dims shard over model (MLA latent attention and
+    # head_dim contractions partial-sum + all-reduce under SPMD); when
+    # kv_heads doesn't divide the model axis, head_dim picks it up.
+    "embed_cache": ("model",),
+    "head_dim": ("model",),
+    "state": (),                 # ssm state dim
+    "heads": ("model",),
+}
+
+# per cache field, axes WITHOUT the optional leading "layers" (added by
+# rank).  `spec_for` drops any non-dividing assignment, so odd shapes
+# degrade to replication, never to an invalid sharding.
+_CACHE_FIELD_AXES = {
+    "k": ("batch", "seq", "kv_heads", "head_dim"),
+    "v": ("batch", "seq", "kv_heads", "head_dim"),
+    "cross_k": ("batch", "seq", "kv_heads", "head_dim"),
+    "cross_v": ("batch", "seq", "kv_heads", "head_dim"),
+    "c_kv": ("batch", "seq", "embed_cache"),
+    "k_rope": ("batch", "seq", "embed_cache"),
+    "conv": ("batch", "seq", "mlp"),
+    "length": (),
+}
+_H_SSM = ("batch", "heads", "head_dim", "state")   # mamba2 state
+_H_LRU = ("batch", "mlp")                          # rg-lru hidden
+
+
+def cache_shardings(cfg, caches, mesh, rules=None):
+    rules = rules or CACHE_RULES_SERVE
+
+    def one(path, x):
+        name = None
+        for p in reversed(path):
+            n = getattr(p, "name", getattr(p, "key", None))
+            if isinstance(n, str) and (n in _CACHE_FIELD_AXES or n == "h"):
+                name = n
+                break
+        shape = tuple(x.shape)
+        if name == "h":
+            ax = _H_SSM if len(shape) >= 4 else _H_LRU
+        elif name is not None:
+            ax = _CACHE_FIELD_AXES[name]
+        else:
+            ax = ()
+        if len(shape) == len(ax) + 1:
+            ax = ("layers",) + ax
+        ax = ax[:len(shape)] if len(ax) >= len(shape) else \
+            ax + (None,) * (len(shape) - len(ax))
+        return NamedSharding(mesh, spec_for(shape, ax, rules, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, caches)

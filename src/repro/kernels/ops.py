@@ -1,0 +1,54 @@
+"""jit'd public wrappers for the propagation kernels.
+
+`batched_fixpoint` picks the best available implementation:
+
+* ``impl="pallas"`` — the VMEM-resident Pallas kernel (TPU target;
+  interpret-mode on CPU),
+* ``impl="gather"`` — the vmapped XLA gather sweep (fast on CPU, and the
+  production fallback on any backend),
+* ``impl="scatter"`` — the scatter oracle (reference).
+
+All three compute the same least fixed point (tests sweep shapes/dtypes
+and assert exact equality — integer lattice, so allclose is `array_equal`).
+
+Comparison spec: implementations agree (a) on the failed mask, and (b)
+exactly on every non-failed lane's store.  Failed lanes' *contents* are
+unspecified — search discards them — and legitimately differ: the scatter
+oracle signals plain-constraint disentailment through the TRUE var, the
+gather forms through term bounds, and early-exit points differ per impl
+(a transiently-disentailed plain constraint can only occur on lanes that
+end failed, so non-failed lanes see identical sweep sequences).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compile import CompiledModel
+from repro.core.fixpoint import fixpoint
+from repro.kernels.fixpoint_kernel import fixpoint_pallas
+from repro.kernels.ref import fixpoint_ref
+
+
+@partial(jax.jit, static_argnames=("impl", "lane_tile", "max_sweeps",
+                                   "interpret"))
+def batched_fixpoint(cm: CompiledModel, lb: jax.Array, ub: jax.Array,
+                     impl: str = "gather", lane_tile: int = 8,
+                     max_sweeps: int = 16384, interpret: bool = True):
+    """Propagate a [L, V] batch of stores to their least fixed points."""
+    if impl == "pallas":
+        nlb, nub, _ = fixpoint_pallas(cm, lb, ub, lane_tile=lane_tile,
+                                      max_sweeps=max_sweeps,
+                                      interpret=interpret)
+        return nlb, nub
+    if impl == "gather":
+        def one(l, u):
+            nl, nu, _, _ = fixpoint(cm, l, u, max_iters=max_sweeps)
+            return nl, nu
+        return jax.vmap(one)(lb, ub)
+    if impl == "scatter":
+        return fixpoint_ref(cm, lb, ub, max_sweeps=max_sweeps)
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the propagation fixpoint kernel.
+
+Propagator-centric scatter form, batched over lanes with vmap — the
+slow-but-obviously-correct reference (`sweep_scatter` is "each propagator
+joins its variables", the literal reading of the paper's load/store
+compilation with atomic joins).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compile import CompiledModel
+from repro.core.fixpoint import fixpoint
+
+
+def fixpoint_ref(cm: CompiledModel, lb: jax.Array, ub: jax.Array,
+                 max_sweeps: int | None = None):
+    """lb, ub: [L, V] lane-batched stores. Returns (lb', ub') at fixpoint."""
+    def one(l, u):
+        nl, nu, _, _ = fixpoint(cm, l, u, max_iters=max_sweeps,
+                                stop_on_fail=True, use_scatter=True)
+        return nl, nu
+
+    return jax.vmap(one)(lb, ub)

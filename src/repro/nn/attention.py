@@ -1,0 +1,282 @@
+"""Attention: blocked (flash-style) softmax attention with GQA/MQA,
+causal/bidirectional/sliding-window masking, KV-cache decode, and MLA
+(multi-head latent attention, deepseek-v2) with absorbed decode.
+
+The blocked kernel is pure jnp (lax.scan over query & KV chunks with an
+online softmax), so peak memory is O(q_chunk × kv_chunk) per head rather
+than O(S²) — this is what makes the 32k-prefill dry-run cells fit HBM.
+A Pallas fused version is a recorded §Perf candidate; the XLA version is
+the portable baseline.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.nn.layers import cast_bf16
+from repro.nn.scanctl import scan_layers
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, kv_pos, kv_valid, *, causal: bool, window: int,
+          kv_len=None):
+    """[..., Sq, Sk] boolean validity mask from position vectors."""
+    m = jnp.broadcast_to(kv_valid[None, :],
+                         (q_pos.shape[-1], kv_pos.shape[-1]))
+    if causal:
+        m = m & (q_pos[:, None] >= kv_pos[None, :])
+    if window > 0:
+        m = m & (q_pos[:, None] - kv_pos[None, :] < window)
+    if kv_len is not None:                       # decode: valid prefix only
+        m = m & (kv_pos[None, :] < kv_len)
+    return m
+
+
+def blocked_attention(q, k, v, q_pos, kv_pos, *, causal: bool = True,
+                      window: int = 0, kv_len=None,
+                      q_chunk: int = 1024, kv_chunk: int = 1024):
+    """q [B,Sq,H,dk], k [B,Sk,KV,dk], v [B,Sk,KV,dv] (H % KV == 0).
+    Returns [B,Sq,H,dv] (dv may differ from dk — MLA latent values).
+
+    Memory: O(B · q_chunk · H · kv_chunk) per scan step (online softmax).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    rep = H // KV
+    scale = 1.0 / np.sqrt(hd)
+
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Sk)
+    # pad ragged tails; padded KV is masked out, padded Q rows are sliced
+    pq, pk = (-Sq) % qc, (-Sk) % kc
+    kv_valid = jnp.arange(Sk + pk) < Sk
+    if pq:
+        q = jnp.concatenate(
+            [q, jnp.zeros((B, pq, H, hd), q.dtype)], axis=1)
+        q_pos = jnp.concatenate([q_pos, jnp.zeros((pq,), q_pos.dtype)])
+    if pk:
+        k = jnp.concatenate(
+            [k, jnp.zeros((B, pk, KV, hd), k.dtype)], axis=1)
+        v = jnp.concatenate(
+            [v, jnp.zeros((B, pk, KV, dv), v.dtype)], axis=1)
+        kv_pos = jnp.concatenate([kv_pos, jnp.zeros((pk,), kv_pos.dtype)])
+    Sqp, Skp = Sq + pq, Sk + pk
+    nq, nk = Sqp // qc, Skp // kc
+
+    qr = q.reshape(B, nq, qc, KV, rep, hd)
+    kr = k.reshape(B, nk, kc, KV, hd).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(B, nk, kc, KV, dv).transpose(1, 0, 2, 3, 4)
+    qpr = q_pos.reshape(nq, qc)
+    kpr = kv_pos.reshape(nk, kc)
+    kvr = kv_valid.reshape(nk, kc)
+
+    def q_step(_, qi):
+        qb, qp = qi                                  # [B,qc,KV,rep,hd], [qc]
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kb, vb, kp, kval = ki
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            valid = _mask(qp, kp, kval, causal=causal, window=window,
+                          kv_len=kv_len)
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(jnp.bfloat16), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, KV, rep, qc, dv), jnp.float32)
+        m0 = jnp.full((B, KV, rep, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, qc), jnp.float32)
+        (acc, m, l), _ = scan_layers(kv_step, (acc0, m0, l0),
+                                     (kr, vr, kpr, kvr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # [B,KV,rep,qc,dv]
+        return None, cast_bf16(out.transpose(0, 3, 1, 2, 4))
+
+    _, outs = scan_layers(q_step, None,
+                          (qr.transpose(1, 0, 2, 3, 4, 5), qpr))
+    # outs [nq, B, qc, KV, rep, dv] -> [B, Sq(+pad), H, dv]
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sqp, H, dv)
+    return out[:, :Sq]
+
+
+# --------------------------------------------------------------------------
+# GQA block (projections + rope + blocked attention)
+# --------------------------------------------------------------------------
+
+def gqa_project_qkv(p, prefix, x, cfg):
+    from repro.nn.layers import dense, rms_norm
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    bias = (lambda n: p.get(f"{prefix}/{n}_b")) if cfg.qkv_bias else (lambda n: None)
+    q = dense(x, p[f"{prefix}/wq"], bias("wq")).reshape(B, S, H, hd)
+    k = dense(x, p[f"{prefix}/wk"], bias("wk")).reshape(B, S, KV, hd)
+    v = dense(x, p[f"{prefix}/wv"], bias("wv")).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p[f"{prefix}/q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p[f"{prefix}/k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # [B, Smax, KV, hd]
+    v: jax.Array
+    length: jax.Array     # scalar i32 — tokens currently in the cache
+
+
+def gqa_attention(p, prefix, x, cfg, positions, *, window: int = 0,
+                  causal: bool = True, cache: Optional[KVCache] = None,
+                  return_kv: bool = False, q_chunk=1024, kv_chunk=1024):
+    """Full GQA block.
+
+    cache=None: full-sequence attention (train / prefill).  With
+    `return_kv`, also returns the rope'd (k, v) so the caller can prime a
+    decode cache.  cache!=None: decode step(s); keys written at
+    `cache.length` (ring-buffered iff window>0; decode is S==1 there).
+    """
+    from repro.nn.layers import dense
+    B, S, _ = x.shape
+    q, k, v = gqa_project_qkv(p, prefix, x, cfg)
+    q = jax.vmap(lambda qq, pp: _rope_heads(qq, pp, cfg.rope_theta),
+                 in_axes=(0, None))(q, positions)
+    k = jax.vmap(lambda kk, pp: _rope_heads(kk, pp, cfg.rope_theta),
+                 in_axes=(0, None))(k, positions)
+
+    if cache is None:
+        out = blocked_attention(q, k, v, positions, positions, causal=causal,
+                                window=window, q_chunk=q_chunk,
+                                kv_chunk=kv_chunk)
+        aux = (k, v) if return_kv else None
+    else:
+        Smax = cache.k.shape[1]
+        slot = cache.length % Smax if window > 0 else cache.length
+        ck = lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+        cv = lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+        if window > 0:
+            # ring buffer: absolute position of physical slot s
+            base = cache.length - (cache.length % Smax)
+            phys = jnp.arange(Smax)
+            kv_pos = jnp.where(phys <= slot, base + phys, base - Smax + phys)
+        else:
+            kv_pos = jnp.arange(Smax)
+        q_pos = cache.length + jnp.arange(S, dtype=jnp.int32)
+        out = blocked_attention(q, ck, cv, q_pos, kv_pos, causal=True,
+                                window=window, kv_len=cache.length + S,
+                                q_chunk=q_chunk, kv_chunk=kv_chunk)
+        aux = KVCache(ck, cv, cache.length + S)
+    out = dense(out.reshape(B, S, -1), p[f"{prefix}/wo"])
+    return out, aux
+
+
+def _rope_heads(x, positions, theta):
+    """x [S, H, hd], positions [S] — angles broadcast over the head axis."""
+    from repro.nn.layers import apply_rope
+    return apply_rope(x, positions, theta)
+
+
+# --------------------------------------------------------------------------
+# MLA — multi-head latent attention (deepseek-v2), absorbed decode
+# --------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array       # [B, Smax, kv_lora]   compressed KV
+    k_rope: jax.Array     # [B, Smax, rope_dim]  shared rope key
+    length: jax.Array
+
+
+def mla_attention(p, prefix, x, cfg, positions, *,
+                  cache: Optional[MLACache] = None, return_kv: bool = False,
+                  q_chunk=1024, kv_chunk=1024):
+    """Prefill/train: expand compressed KV and run blocked attention
+    (with `return_kv`, also return (c_kv, k_rope) to prime a decode
+    cache).  Decode: absorbed form — queries projected into the latent
+    space, the cache stays [kv_lora + rope_dim] per position (the
+    MLA memory win)."""
+    from repro.nn.layers import dense, rms_norm, apply_rope
+    mla = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nd, rd, vd, kvl = mla.nope_dim, mla.rope_dim, mla.v_dim, mla.kv_lora
+
+    # --- queries (with LoRA) ---
+    cq = dense(x, p[f"{prefix}/w_dq"])
+    cq = rms_norm(cq, p[f"{prefix}/q_norm"], cfg.norm_eps)
+    q = dense(cq, p[f"{prefix}/w_uq"]).reshape(B, S, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = jax.vmap(lambda qq, pp: _rope_heads(qq, pp, cfg.rope_theta),
+                      in_axes=(0, None))(q_rope, positions)
+
+    # --- compressed KV ---
+    ckv = dense(x, p[f"{prefix}/w_dkv"])                    # [B,S,kvl]
+    ckv = rms_norm(ckv, p[f"{prefix}/kv_norm"], cfg.norm_eps)
+    krope = dense(x, p[f"{prefix}/w_kr"])                   # [B,S,rd]
+    krope = jax.vmap(lambda kk, pp: apply_rope(kk, pp, cfg.rope_theta),
+                     in_axes=(0, None))(krope, positions)
+
+    w_uk = p[f"{prefix}/w_uk"].reshape(kvl, H, nd)
+    w_uv = p[f"{prefix}/w_uv"].reshape(kvl, H, vd)
+
+    if cache is None:
+        # prefill/train: expand K latent -> per-head keys; rope part shared
+        k_nope = jnp.einsum("bsc,chd->bshd", cast_bf16(ckv), cast_bf16(w_uk),
+                            preferred_element_type=jnp.float32)
+        k_nope = cast_bf16(k_nope)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope[:, :, None, :], (B, S, H, rd))],
+            axis=-1)
+        v_full = cast_bf16(jnp.einsum("bsc,chd->bshd", cast_bf16(ckv),
+                                      cast_bf16(w_uv),
+                                      preferred_element_type=jnp.float32))
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = blocked_attention(q_full, k_full, v_full, positions, positions,
+                                causal=True, q_chunk=q_chunk,
+                                kv_chunk=kv_chunk)
+        new_cache = (ckv, krope) if return_kv else None
+    else:
+        # absorbed decode: q' = q_nope @ W_uk  ->  latent-space scores
+        Smax = cache.c_kv.shape[1]
+        cc = lax.dynamic_update_slice(cache.c_kv, ckv, (0, cache.length, 0))
+        cr = lax.dynamic_update_slice(cache.k_rope, krope,
+                                      (0, cache.length, 0))
+        q_lat = jnp.einsum("bshd,chd->bshc", cast_bf16(q_nope),
+                           cast_bf16(w_uk),
+                           preferred_element_type=jnp.float32)
+        q_lat = cast_bf16(q_lat)                            # [B,S,H,kvl]
+        # treat (c_kv ++ k_rope) as a single-KV-head key of dim kvl+rd
+        k_cat = jnp.concatenate([cc, cr], axis=-1)[:, :, None, :]
+        q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)
+        # §Perf P2c: align q with the latent-sharded cache so the scores
+        # contraction partial-sums over latent shards (all-reduce of the
+        # small [B,H,1,S] scores) instead of all-gathering the whole
+        # cache every layer — decode was collective-bound 400:1 without it
+        from repro.nn.layers import constrain
+        q_cat = constrain(q_cat, None, None, None, "model")
+        # scale correction: blocked_attention scales by 1/sqrt(kvl+rd);
+        # MLA wants 1/sqrt(nd+rd)
+        fix = np.sqrt(kvl + rd) / np.sqrt(nd + rd)
+        ctx = blocked_attention(q_cat * fix, k_cat,
+                                cc[:, :, None, :],      # latent values
+                                cache.length + jnp.arange(S, dtype=jnp.int32),
+                                jnp.arange(Smax), causal=True,
+                                kv_len=cache.length + S,
+                                q_chunk=q_chunk, kv_chunk=kv_chunk)
+        out = jnp.einsum("bshc,chd->bshd", cast_bf16(ctx), cast_bf16(w_uv),
+                         preferred_element_type=jnp.float32)
+        out = cast_bf16(out)
+        new_cache = MLACache(cc, cr, cache.length + S)
+
+    out = dense(out.reshape(B, S, H * vd), p[f"{prefix}/wo"])
+    return out, new_cache

@@ -1,0 +1,600 @@
+"""Whole-model assembly: param specs, train/prefill/decode forwards, caches.
+
+Families (configs/base.py): dense | moe | vlm | hybrid | audio | ssm.
+Layer stacks are grouped into homogeneous *groups*; groups with count > 1
+are `lax.scan`-ned over stacked params (HLO size O(1) in depth), size-1
+groups are unrolled (e.g. deepseek's leading dense layer).  Caches mirror
+the group structure with a leading layer axis.
+
+Modality frontends are stubs per the assignment: `input_specs` (launch/
+dryrun.py) provides precomputed patch/frame embeddings; a learned
+projection makes them non-trivial without pretending to be a ViT/w2v-BERT.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.nn.scanctl import (scan_layers, unroll_scans,  # noqa: F401
+                              remat_policy)
+from repro.nn import scanctl
+
+from repro.configs.base import ArchConfig
+from repro.nn.layers import (ParamSpec, Specs, dense, embed_lookup, rms_norm,
+                             unembed)
+from repro.nn import transformer as T
+from repro.nn.attention import KVCache, MLACache
+from repro.nn.ssm import SSMCache
+from repro.nn.rglru import RGLRUCache
+
+# --------------------------------------------------------------------------
+# group structure
+# --------------------------------------------------------------------------
+
+
+def decoder_groups(cfg: ArchConfig) -> List[Tuple[str, int, str]]:
+    """[(kind, count, prefix)] for the decoder stack."""
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        return [("ssm", L, "blocks")]
+    if cfg.family == "hybrid":
+        pat = cfg.rglru.pattern
+        n_per = L // len(pat)
+        groups = [("period", n_per, "periods")]
+        for i in range(L % len(pat)):
+            groups.append((f"tail_{pat[i]}", 1, f"tail{i}"))
+        return groups
+    if cfg.moe is not None:
+        groups = []
+        if cfg.moe.first_dense:
+            groups.append(("dense", cfg.moe.first_dense, "dense0"))
+        groups.append(("moe", L - cfg.moe.first_dense, "blocks"))
+        return groups
+    return [("dense", L, "blocks")]
+
+
+# --------------------------------------------------------------------------
+# param specs
+# --------------------------------------------------------------------------
+
+def _block_specs(cfg: ArchConfig, kind: str) -> Specs:
+    d = cfg.d_model
+    s: Specs = {}
+    if kind in ("dense", "moe"):
+        s["norm1"] = T.norm_spec(d)
+        s["norm2"] = T.norm_spec(d)
+        T.add(s, "attn", T.mla_specs(cfg) if cfg.mla else T.gqa_specs(cfg))
+        if kind == "dense":
+            ff = (cfg.moe.d_ff_dense if (cfg.moe and cfg.moe.d_ff_dense)
+                  else cfg.d_ff)
+            T.add(s, "ffn", T.ffn_specs(d, ff))
+        else:
+            T.add(s, "moe", T.moe_specs(cfg))
+    elif kind == "ssm":
+        s["norm1"] = T.norm_spec(d)
+        T.add(s, "ssm", T.ssm_specs(cfg))
+    elif kind == "rec" or kind.startswith("tail_rec"):
+        s["norm1"] = T.norm_spec(d)
+        T.add(s, "rec", T.rglru_specs(cfg))
+        s["norm2"] = T.norm_spec(d)
+        T.add(s, "ffn", T.ffn_specs(d, cfg.d_ff))
+    elif kind == "attn" or kind.startswith("tail_attn"):
+        s["norm1"] = T.norm_spec(d)
+        T.add(s, "attn", T.gqa_specs(cfg))
+        s["norm2"] = T.norm_spec(d)
+        T.add(s, "ffn", T.ffn_specs(d, cfg.d_ff))
+    elif kind == "period":
+        pat = cfg.rglru.pattern
+        for i, sub_kind in enumerate(pat):
+            sk = "rec" if sub_kind == "rec" else "attn"
+            inner = _block_specs(cfg, sk)
+            T.add(s, f"sub{i}_{sub_kind}", inner)
+    elif kind == "enc":
+        s["norm1"] = T.norm_spec(d)
+        T.add(s, "attn", T.gqa_specs(cfg))
+        s["norm2"] = T.norm_spec(d)
+        T.add(s, "ffn", T.ffn_specs(d, cfg.d_ff))
+    elif kind == "dec":
+        s["norm1"] = T.norm_spec(d)
+        T.add(s, "attn", T.gqa_specs(cfg))
+        s["norm_x"] = T.norm_spec(d)
+        T.add(s, "xattn", T.xattn_specs(cfg))
+        s["norm2"] = T.norm_spec(d)
+        T.add(s, "ffn", T.ffn_specs(d, cfg.d_ff))
+    else:
+        raise ValueError(kind)
+    return s
+
+
+def _stack(specs: Specs, n: int) -> Specs:
+    return {k: ParamSpec((n,) + v.shape, ("layers",) + v.axes, v.init,
+                         v.scale) for k, v in specs.items()}
+
+
+def param_specs(cfg: ArchConfig) -> Specs:
+    d, V = cfg.d_model, cfg.vocab
+    s: Specs = {
+        "embed/tok": ParamSpec((V, d), ("vocab", "embed"), init="embed"),
+        "final_norm": T.norm_spec(d),
+    }
+    if not cfg.tie_embeddings:
+        s["unembed/w"] = ParamSpec((V, d), ("vocab", "embed"), init="embed")
+
+    if cfg.encdec is not None:
+        s["frontend/proj"] = ParamSpec((d, d), ("embed", None))
+        s["enc_final_norm"] = T.norm_spec(d)
+        for k, v in _stack(_block_specs(cfg, "enc"),
+                           cfg.encdec.enc_layers).items():
+            s[f"enc_blocks/{k}"] = v
+        for k, v in _stack(_block_specs(cfg, "dec"),
+                           cfg.encdec.dec_layers).items():
+            s[f"dec_blocks/{k}"] = v
+        return s
+
+    if cfg.frontend == "vit_stub":
+        s["frontend/proj"] = ParamSpec((d, d), ("embed", None))
+
+    for kind, count, prefix in decoder_groups(cfg):
+        bs = _block_specs(cfg, kind)
+        if count > 1:
+            bs = _stack(bs, count)
+        for k, v in bs.items():
+            s[f"{prefix}/{k}"] = v
+    return s
+
+
+def active_param_fraction(cfg: ArchConfig, path: str) -> float:
+    """Per-token activation fraction (MoE routed experts only)."""
+    if cfg.moe is not None and "/moe/w_" in path:
+        return cfg.moe.top_k / cfg.moe.n_experts
+    return 1.0
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+def _kv_cache(cfg, B, smax, n=None, dtype=jnp.bfloat16):
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    lead = (n,) if n else ()
+    z = lambda *sh: jnp.zeros(lead + sh, dtype)  # noqa: E731
+    return KVCache(z(B, smax, KV, hd), z(B, smax, KV, hd),
+                   jnp.zeros(lead, jnp.int32) if n else jnp.asarray(0, jnp.int32))
+
+
+def _mla_cache(cfg, B, smax, n=None, dtype=jnp.bfloat16):
+    mla = cfg.mla
+    lead = (n,) if n else ()
+    z = lambda *sh: jnp.zeros(lead + sh, dtype)  # noqa: E731
+    return MLACache(z(B, smax, mla.kv_lora), z(B, smax, mla.rope_dim),
+                    jnp.zeros(lead, jnp.int32) if n else jnp.asarray(0, jnp.int32))
+
+
+def _ssm_cache(cfg, B, n=None):
+    ssm = cfg.ssm
+    d_in = ssm.expand * cfg.d_model
+    H = d_in // ssm.head_dim
+    conv_dim = d_in + 2 * ssm.n_groups * ssm.state
+    lead = (n,) if n else ()
+    return SSMCache(
+        jnp.zeros(lead + (B, H, ssm.head_dim, ssm.state), jnp.float32),
+        jnp.zeros(lead + (B, ssm.conv - 1, conv_dim), jnp.bfloat16),
+        jnp.zeros(lead, jnp.int32) if n else jnp.asarray(0, jnp.int32))
+
+
+def _rglru_cache(cfg, B, n=None):
+    W = cfg.rglru.lru_width or cfg.d_model
+    lead = (n,) if n else ()
+    return RGLRUCache(
+        jnp.zeros(lead + (B, W), jnp.float32),
+        jnp.zeros(lead + (B, cfg.rglru.conv - 1, W), jnp.bfloat16),
+        jnp.zeros(lead, jnp.int32) if n else jnp.asarray(0, jnp.int32))
+
+
+def init_cache(cfg: ArchConfig, B: int, smax: int):
+    """Zero caches for decoding up to `smax` tokens (window archs use a
+    ring buffer of the window size — bounded state)."""
+    if cfg.encdec is not None:
+        KV, hd = cfg.n_kv_heads, cfg.hd
+        nL = cfg.encdec.dec_layers
+        enc_len = cfg.frontend_tokens
+        return {
+            "self": _kv_cache(cfg, B, smax, nL),
+            "cross_k": jnp.zeros((nL, B, enc_len, KV, hd), jnp.bfloat16),
+            "cross_v": jnp.zeros((nL, B, enc_len, KV, hd), jnp.bfloat16),
+        }
+    caches = {}
+    for kind, count, prefix in decoder_groups(cfg):
+        n = count if count > 1 else None
+        if kind in ("dense", "moe"):
+            c = (_mla_cache(cfg, B, smax, n) if cfg.mla
+                 else _kv_cache(cfg, B, smax, n))
+        elif kind == "ssm":
+            c = _ssm_cache(cfg, B, n)
+        elif kind == "period":
+            c = {}
+            for i, sk in enumerate(cfg.rglru.pattern):
+                if sk == "rec":
+                    c[f"sub{i}"] = _rglru_cache(cfg, B, n)
+                else:
+                    w = min(cfg.rglru.window, smax)
+                    c[f"sub{i}"] = _kv_cache(cfg, B, w, n)
+        elif kind.startswith("tail_rec"):
+            c = _rglru_cache(cfg, B, None)
+        elif kind.startswith("tail_attn"):
+            c = _kv_cache(cfg, B, min(cfg.rglru.window, smax), None)
+        else:
+            raise ValueError(kind)
+        caches[prefix] = c
+    return caches
+
+
+# --------------------------------------------------------------------------
+# block forward dispatch (single layer)
+# --------------------------------------------------------------------------
+
+def _run_block(kind: str, p, x, cfg, positions, cache, chunks,
+               prime: bool = False):
+    """Returns (x, new_cache_or_primed_state, aux)."""
+    aux = {}
+    if kind in ("dense", "moe"):
+        x, cache = T.run_attn(p, x, cfg, positions, cache=cache,
+                              prime=prime, chunks=chunks)
+        if kind == "dense":
+            x = T.run_ffn(p, x, cfg)
+        else:
+            x, aux = T.run_moe(p, x, cfg)
+    elif kind == "ssm":
+        x, cache = T.run_ssm(p, x, cfg, cache=cache, prime=prime)
+    elif kind == "rec" or kind.startswith("tail_rec"):
+        x, cache = T.run_rglru(p, x, cfg, cache=cache, prime=prime)
+        x = T.run_ffn(p, x, cfg)
+    elif kind == "attn" or kind.startswith("tail_attn"):
+        x, cache = T.run_attn(p, x, cfg, positions,
+                              window=cfg.rglru.window, cache=cache,
+                              prime=prime, chunks=chunks)
+        x = T.run_ffn(p, x, cfg)
+    elif kind == "period":
+        new_c = {}
+        for i, sk in enumerate(cfg.rglru.pattern):
+            sp = T.sub(p, f"sub{i}_{sk}")
+            ci = cache[f"sub{i}"] if cache is not None else None
+            x, nc, _ = _run_block("rec" if sk == "rec" else "attn",
+                                  sp, x, cfg, positions, ci, chunks, prime)
+            new_c[f"sub{i}"] = nc
+        cache = new_c if (cache is not None or prime) else None
+    else:
+        raise ValueError(kind)
+    return x, cache, aux
+
+
+def _merge_aux(acc: Dict, aux: Dict):
+    for k, v in aux.items():
+        acc[k] = acc.get(k, 0.0) + v
+    return acc
+
+
+def _scan_group(kind, params, prefix, x, cfg, positions, caches, chunks,
+                remat: bool):
+    """Scan one stacked group with its stacked cache.
+    Returns (x, new_caches, aux)."""
+    stacked = T.sub(params, prefix)
+    cache = caches.get(prefix) if caches is not None else None
+
+    def body(carry, layer):
+        xc = carry
+        lp, lc = layer
+        xo, nc, aux = _run_block(kind, lp, xc, cfg, positions, lc, chunks)
+        return xo, (nc, aux)
+
+    body_fn = scanctl.checkpoint(body) if remat else body
+    x, (new_cache, auxs) = scan_layers(body_fn, x, (stacked, cache))
+    aux = {k: v.sum() for k, v in auxs.items()}
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# public forwards
+# --------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg, batch):
+    """tokens (+ stub modality inputs) -> (x [B,S,d], positions [S],
+    n_prefix) where n_prefix = frontend tokens prepended before text."""
+    from repro.nn.layers import constrain
+    tokens = batch["tokens"]
+    x = embed_lookup(params["embed/tok"], tokens)
+    n_prefix = 0
+    if cfg.frontend == "vit_stub":
+        pe = dense(batch["patch_embeds"], params["frontend/proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+        n_prefix = pe.shape[1]
+    # anchor the activation sharding: batch over (pod, data) — the embed
+    # gather otherwise propagates the table's sharding, replicating batch
+    x = constrain(x, ("pod", "data"), None, None)
+    S = x.shape[1]
+    return x, jnp.arange(S, dtype=jnp.int32), n_prefix
+
+
+def forward_train(params, cfg: ArchConfig, batch, *, remat: bool = True,
+                  chunks=(1024, 1024)):
+    """Teacher-forced logits [B, S, V] (+ aux losses)."""
+    if cfg.encdec is not None:
+        return _forward_encdec_train(params, cfg, batch, remat=remat,
+                                     chunks=chunks)
+    x, positions, n_prefix = _embed_inputs(params, cfg, batch)
+    aux: Dict = {}
+    for kind, count, prefix in decoder_groups(cfg):
+        if count > 1:
+            x, _, a = _scan_group_nocache(kind, params, prefix, x, cfg,
+                                          positions, chunks, remat)
+        else:
+            x, _, a = _run_block(kind, T.sub(params, prefix), x, cfg,
+                                 positions, None, chunks)
+        _merge_aux(aux, a)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params.get("unembed/w", params["embed/tok"]))
+    if n_prefix:
+        logits = logits[:, n_prefix:]
+    return logits, aux
+
+
+def _scan_group_nocache(kind, params, prefix, x, cfg, positions, chunks,
+                        remat):
+    stacked = T.sub(params, prefix)
+
+    def body(xc, lp):
+        xo, _, aux = _run_block(kind, lp, xc, cfg, positions, None, chunks)
+        return xo, aux
+
+    body_fn = scanctl.checkpoint(body) if remat else body
+    x, auxs = scan_layers(body_fn, x, stacked)
+    return x, None, {k: v.sum() for k, v in auxs.items()}
+
+
+def _forward_encdec_train(params, cfg, batch, *, remat, chunks):
+    from repro.nn.layers import constrain
+    frames = batch["frames"]
+    enc = dense(frames.astype(jnp.bfloat16), params["frontend/proj"])
+    enc = constrain(enc, ("pod", "data"), None, None)
+    S_enc = enc.shape[1]
+    pos_e = jnp.arange(S_enc, dtype=jnp.int32)
+
+    def enc_body(xc, lp):
+        h = rms_norm(xc, lp["norm1"], cfg.norm_eps)
+        from repro.nn.attention import gqa_attention
+        o, _ = gqa_attention(lp, "attn", h, cfg, pos_e, causal=False,
+                             q_chunk=chunks[0], kv_chunk=chunks[1])
+        xc = xc + o
+        return T.run_ffn(lp, xc, cfg), None
+
+    enc_body_fn = scanctl.checkpoint(enc_body) if remat else enc_body
+    enc, _ = scan_layers(enc_body_fn, enc, T.sub(params, "enc_blocks"))
+    enc = rms_norm(enc, params["enc_final_norm"], cfg.norm_eps)
+
+    x = embed_lookup(params["embed/tok"], batch["tokens"])
+    x = constrain(x, ("pod", "data"), None, None)
+    pos_d = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def dec_body(xc, lp):
+        xc, _ = T.run_attn(lp, xc, cfg, pos_d, chunks=chunks)
+        xc = T.run_cross_attn(lp, xc, T.cross_kv(lp, enc, cfg), cfg, chunks)
+        return T.run_ffn(lp, xc, cfg), None
+
+    dec_body_fn = scanctl.checkpoint(dec_body) if remat else dec_body
+    x, _ = scan_layers(dec_body_fn, x, T.sub(params, "dec_blocks"))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params.get("unembed/w", params["embed/tok"]))
+    return logits, {}
+
+
+def _pad_prefix(arr, smax: int):
+    """[..., B, S, ...rest] KV written into a zeroed [B, smax, ...] cache
+    (seq axis is axis -3 for kv / -2 for latent tensors)."""
+    def one(a):                                  # a [B, S, ...]
+        S = a.shape[1]
+        pad = [(0, 0)] * a.ndim
+        pad[1] = (0, smax - S)
+        return jnp.pad(a, pad)
+    return one(arr)
+
+
+def _place_ring(arr, W: int):
+    """[B, S, ...] → ring buffer [B, W, ...] holding the last min(S,W)
+    entries at physical slots ((S-w+i) mod W) — matches the decode-side
+    ring reconstruction in gqa_attention."""
+    S = arr.shape[1]
+    w = min(S, W)
+    last = arr[:, S - w:]
+    phys = (S - w + np.arange(w)) % W
+    out = jnp.zeros(arr.shape[:1] + (W,) + arr.shape[2:], arr.dtype)
+    return out.at[:, phys].set(last)
+
+
+def _maybe_vmap(fn, arr, stacked: bool):
+    return jax.vmap(fn)(arr) if stacked else fn(arr)
+
+
+def _assemble_cache(kind, raw, cfg, smax: int, S: int, stacked: bool):
+    """Primed per-layer states → decode cache structures."""
+    n = None
+    if stacked:
+        n = jax.tree_util.tree_leaves(raw)[0].shape[0]
+    lengths = (jnp.full((n,), S, jnp.int32) if stacked
+               else jnp.asarray(S, jnp.int32))
+    if kind in ("dense", "moe"):
+        if cfg.mla is not None:
+            ckv, krope = raw
+            return MLACache(
+                _maybe_vmap(lambda a: _pad_prefix(a, smax), ckv, stacked),
+                _maybe_vmap(lambda a: _pad_prefix(a, smax), krope, stacked),
+                lengths)
+        k, v = raw
+        return KVCache(
+            _maybe_vmap(lambda a: _pad_prefix(a, smax), k, stacked),
+            _maybe_vmap(lambda a: _pad_prefix(a, smax), v, stacked),
+            lengths)
+    if kind == "ssm":
+        h, tail = raw
+        return SSMCache(h, tail, lengths)
+    if kind == "rec" or kind.startswith("tail_rec"):
+        h, tail = raw
+        return RGLRUCache(h, tail, lengths)
+    if kind == "attn" or kind.startswith("tail_attn"):
+        k, v = raw
+        W = min(cfg.rglru.window, smax)
+        return KVCache(
+            _maybe_vmap(lambda a: _place_ring(a, W), k, stacked),
+            _maybe_vmap(lambda a: _place_ring(a, W), v, stacked),
+            lengths)
+    if kind == "period":
+        out = {}
+        for i, sk in enumerate(cfg.rglru.pattern):
+            out[f"sub{i}"] = _assemble_cache(
+                "rec" if sk == "rec" else "attn", raw[f"sub{i}"], cfg,
+                smax, S, stacked)
+        return out
+    raise ValueError(kind)
+
+
+def forward_prefill(params, cfg: ArchConfig, batch, smax: int,
+                    chunks=(1024, 1024)):
+    """Process a prompt with full-sequence kernels, then *prime* decode
+    caches from the returned per-layer states.  Returns (last-token
+    logits, caches)."""
+    if cfg.encdec is not None:
+        return _prefill_encdec(params, cfg, batch, smax, chunks)
+    x, positions, n_prefix = _embed_inputs(params, cfg, batch)
+    S = x.shape[1]
+    caches = {}
+    for kind, count, prefix in decoder_groups(cfg):
+        if count > 1:
+            stacked = T.sub(params, prefix)
+
+            def body(xc, lp):
+                xo, st, _ = _run_block(kind, lp, xc, cfg, positions, None,
+                                       chunks, prime=True)
+                return xo, st
+
+            x, raw = scan_layers(body, x, stacked)
+            caches[prefix] = _assemble_cache(kind, raw, cfg, smax, S, True)
+        else:
+            x, raw, _ = _run_block(kind, T.sub(params, prefix), x, cfg,
+                                   positions, None, chunks, prime=True)
+            caches[prefix] = _assemble_cache(kind, raw, cfg, smax, S, False)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params.get("unembed/w", params["embed/tok"]))
+    return logits[:, 0], caches
+
+
+def _prefill_encdec(params, cfg, batch, smax, chunks):
+    """Seamless: encoder pass + cross-KV priming + teacher-forced decoder
+    prefill over the prompt tokens."""
+    from repro.nn.layers import constrain
+    caches = encode_and_prime(params, cfg, batch, smax, chunks)
+    tokens = batch["tokens"]
+    x = embed_lookup(params["embed/tok"], tokens)
+    x = constrain(x, ("pod", "data"), None, None)
+    S = x.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+
+    def body(xc, layer):
+        lp, ck, cv = layer
+        xc, kv = T.run_attn(lp, xc, cfg, pos, prime=True, chunks=chunks)
+        xc = T.run_cross_attn(lp, xc, (ck, cv), cfg, chunks)
+        xc = T.run_ffn(lp, xc, cfg)
+        return xc, kv
+
+    x, raw = scan_layers(body, x, (T.sub(params, "dec_blocks"),
+                                   caches["cross_k"], caches["cross_v"]))
+    caches["self"] = _assemble_cache("dense", raw, cfg, smax, S, True)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params.get("unembed/w", params["embed/tok"]))
+    return logits[:, 0], caches
+
+
+def forward_decode(params, cfg: ArchConfig, tokens, caches,
+                   chunks=(1, 1024), batch=None):
+    """One decode step: tokens [B, 1] → logits [B, V], updated caches."""
+    if cfg.encdec is not None:
+        return _decode_encdec(params, cfg, tokens, caches, chunks)
+    from repro.nn.layers import constrain
+    x = embed_lookup(params["embed/tok"], tokens)
+    x = constrain(x, ("pod", "data"), None, None)
+    # absolute position = current cache length (uniform across batch)
+    length = _cache_length(cfg, caches)
+    positions = length[None].astype(jnp.int32)
+    new_caches = {}
+    for kind, count, prefix in decoder_groups(cfg):
+        if count > 1:
+            x, nc, _ = _scan_group(kind, params, prefix, x, cfg, positions,
+                                   caches, chunks, remat=False)
+        else:
+            x, nc, _ = _run_block(kind, T.sub(params, prefix), x, cfg,
+                                  positions, caches.get(prefix), chunks)
+        new_caches[prefix] = nc
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params.get("unembed/w", params["embed/tok"]))
+    return logits[:, 0], new_caches
+
+
+def _decode_encdec(params, cfg, tokens, caches, chunks):
+    from repro.nn.layers import constrain
+    x = embed_lookup(params["embed/tok"], tokens)
+    x = constrain(x, ("pod", "data"), None, None)
+    pos = caches["self"].length[0][None].astype(jnp.int32)
+
+    def body(xc, layer):
+        lp, sc, ck, cv = layer
+        xc, nsc = T.run_attn(lp, xc, cfg, pos, cache=sc, chunks=chunks)
+        xc = T.run_cross_attn(lp, xc, (ck, cv), cfg, chunks)
+        xc = T.run_ffn(lp, xc, cfg)
+        return xc, nsc
+
+    x, nsc = scan_layers(body, x, (T.sub(params, "dec_blocks"),
+                                   caches["self"], caches["cross_k"],
+                                   caches["cross_v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params.get("unembed/w", params["embed/tok"]))
+    return logits[:, 0], {**caches, "self": nsc}
+
+
+def encode_and_prime(params, cfg, batch, smax, chunks=(1024, 1024)):
+    """Seamless: run the encoder, prime cross-KV caches + empty self cache."""
+    from repro.nn.layers import constrain
+    frames = batch["frames"]
+    enc = dense(frames.astype(jnp.bfloat16), params["frontend/proj"])
+    enc = constrain(enc, ("pod", "data"), None, None)
+    pos_e = jnp.arange(enc.shape[1], dtype=jnp.int32)
+    from repro.nn.attention import gqa_attention
+
+    def enc_body(xc, lp):
+        h = rms_norm(xc, lp["norm1"], cfg.norm_eps)
+        o, _ = gqa_attention(lp, "attn", h, cfg, pos_e, causal=False,
+                             q_chunk=chunks[0], kv_chunk=chunks[1])
+        return T.run_ffn(lp, xc + o, cfg), None
+
+    enc, _ = scan_layers(enc_body, enc, T.sub(params, "enc_blocks"))
+    enc = rms_norm(enc, params["enc_final_norm"], cfg.norm_eps)
+
+    def kv_body(_, lp):
+        return None, T.cross_kv(lp, enc, cfg)
+
+    _, (ck, cv) = scan_layers(kv_body, None, T.sub(params, "dec_blocks"))
+    cache = init_cache(cfg, frames.shape[0], smax)
+    return {**cache, "cross_k": ck, "cross_v": cv}
+
+
+def _cache_length(cfg, caches):
+    leaf = caches[decoder_groups(cfg)[0][2]]
+    if isinstance(leaf, dict):                # period group
+        for v in leaf.values():
+            leaf = v
+            break
+    length = leaf.length
+    return length[0] if length.ndim else length

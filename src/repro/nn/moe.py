@@ -1,0 +1,120 @@
+"""Mixture-of-experts FFN: top-k token-choice routing with capacity-based
+gather dispatch (GShard-style, but index-gather instead of one-hot matmul
+so dispatch is O(T·k) memory) and grouped expert matmuls.
+
+Baseline parallelism (DESIGN.md §7): experts' FFN dim is tensor-sharded
+over the `model` mesh axis (every device holds a slice of *every* expert);
+tokens stay data-sharded, so no all-to-all is needed.  The expert-parallel
+all-to-all variant is a §Perf hillclimb alternative in
+`distributed/collectives.py`.
+
+Dropped tokens (over capacity) contribute zero — standard for
+capacity-factor routing; the router is computed in f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.nn.layers import cast_bf16, dense
+
+
+def topk_route(logits, k: int):
+    """logits [T, E] f32 → (probs [T,k], idx [T,k]); probs renormalized
+    over the selected experts (deepseek/dbrx convention)."""
+    vals, idx = lax.top_k(logits, k)
+    probs = jax.nn.softmax(vals, axis=-1)
+    return probs, idx
+
+
+def dispatch_indices(idx, n_experts: int, capacity: int):
+    """Build [E, C] token-slot table from [T, k] expert assignments.
+
+    Returns (slot_token [E*C] int32 — flat token index or T_pad sentinel,
+    keep_mask [T, k] — False for capacity-dropped assignments,
+    pos [T, k] — the slot each assignment landed in).
+    """
+    T, k = idx.shape
+    flat = idx.reshape(-1)                               # [T*k]
+    # rank of each assignment within its expert, in (token, slot) order
+    order = jnp.argsort(flat, stable=True)
+    sorted_e = flat[order]
+    seg_start = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32),
+         jnp.cumsum(jnp.bincount(sorted_e, length=n_experts)
+                    .astype(jnp.int32))[:-1]])
+    rank_sorted = jnp.arange(T * k, dtype=jnp.int32) - seg_start[sorted_e]
+    rank = jnp.zeros(T * k, jnp.int32).at[order].set(rank_sorted)
+    keep = rank < capacity
+    dest = jnp.where(keep, flat * capacity + rank, n_experts * capacity)
+    slot_token = jnp.full((n_experts * capacity + 1,), T, jnp.int32)
+    slot_token = slot_token.at[dest].set(
+        jnp.arange(T * k, dtype=jnp.int32) // k)[:-1]
+    return slot_token, keep.reshape(T, k), rank.reshape(T, k)
+
+
+def moe_ffn(p, prefix, x, cfg):
+    """x [B, S, d] → MoE SwiGLU output [B, S, d] (+ aux losses dict)."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    E, K = moe.n_experts, moe.top_k
+    C = int(np.ceil(T * K / E * moe.capacity_factor))
+    C = max(8, -(-C // 8) * 8)                          # pad for lanes
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p[f"{prefix}/router"].astype(jnp.float32))
+    probs, idx = topk_route(logits, K)
+
+    slot_token, keep, rank = dispatch_indices(idx, E, C)
+    xpad = jnp.concatenate([cast_bf16(xt), jnp.zeros((1, d), jnp.bfloat16)])
+    xe = xpad[slot_token].reshape(E, C, d)              # gather dispatch
+    # NOTE (§Perf, refuted hypothesis): forcing a capacity-parallel
+    # sharding here (xe/ye constrained to spread C over the data axis)
+    # *tripled* temp memory — XLA reshards the dispatch gathers through
+    # replicated intermediates.  Microbatch accumulation (train_step) is
+    # the effective lever for MoE activation memory instead.
+
+    w_g = cast_bf16(p[f"{prefix}/w_gate"])              # [E, d, ff]
+    w_u = cast_bf16(p[f"{prefix}/w_up"])
+    w_d = cast_bf16(p[f"{prefix}/w_down"])              # [E, ff, d]
+    g = jnp.einsum("ecd,edf->ecf", xe, w_g,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", xe, w_u,
+                   preferred_element_type=jnp.float32)
+    h = cast_bf16(jax.nn.silu(g) * u)
+    ye = cast_bf16(jnp.einsum("ecf,efd->ecd", h, w_d,
+                              preferred_element_type=jnp.float32))
+
+    # combine: each (token, slot) gathers its expert output × prob
+    # (bf16 gather, f32 accumulation — keeps the [T,K,d] blob at 2 bytes)
+    flat_dest = jnp.where(keep.reshape(-1),
+                          idx.reshape(-1) * C + rank.reshape(-1),
+                          E * C)
+    ypad = jnp.concatenate([ye.reshape(E * C, d),
+                            jnp.zeros((1, d), jnp.bfloat16)])
+    per_assign = ypad[flat_dest].reshape(T, K, d)
+    yt = jnp.einsum("tkd,tk->td", per_assign, probs.astype(jnp.bfloat16),
+                    preferred_element_type=jnp.float32)
+
+    # shared experts (deepseek): dense SwiGLU of width n_shared · d_expert
+    if moe.n_shared > 0:
+        yt = yt + _shared_ffn(p, prefix, xt).astype(jnp.float32)
+
+    # aux: load-balance loss (Switch-style) — used by train_step
+    me = jnp.mean(jax.nn.softmax(logits, -1), axis=0)
+    ce = jnp.mean((jnp.zeros((T, E)).at[jnp.arange(T)[:, None], idx]
+                   .add(1.0) / K), axis=0)
+    aux = {"moe_balance": E * jnp.sum(me * ce),
+           "moe_dropped": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return cast_bf16(yt).reshape(B, S, d), aux
+
+
+def _shared_ffn(p, prefix, xt):
+    from repro.nn.layers import swiglu
+    return swiglu(xt, p[f"{prefix}/shared_gate"], p[f"{prefix}/shared_up"],
+                  p[f"{prefix}/shared_down"])

@@ -1,0 +1,98 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = σ(W_a x_t + b_a)          recurrence gate
+    i_t = σ(W_x x_t + b_x)          input gate
+    a_t = a^(c·r_t)                 a = σ(Λ), c = 8
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Prefill/train uses `lax.associative_scan` (log-depth, TPU-friendly —
+h_t = a_t h_{t-1} + b_t composes associatively), decode is the O(1) step;
+bounded state is why this arch runs `long_500k`.
+
+The block wraps the LRU in the Griffin recurrent-block structure:
+gated branch (linear → GeLU) ⊗ (linear → causal conv → RG-LRU) → linear.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.nn.layers import cast_bf16, dense
+from repro.nn.ssm import _causal_conv
+
+
+class RGLRUCache(NamedTuple):
+    h: jax.Array          # [B, W]  LRU hidden state (f32)
+    conv: jax.Array       # [B, conv-1, W] conv tail
+    length: jax.Array
+
+
+def _rglru_scan(x, r, i, a_param, c: float):
+    """x/r/i [B,S,W] (f32). Returns h [B,S,W] and final state."""
+    log_a = c * r * jax.nn.log_sigmoid(a_param)[None, None, :]   # [B,S,W]
+    a = jnp.exp(log_a)
+    gated = i * x
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_step(x, r, i, a_param, c: float, h_prev):
+    log_a = c * r * jax.nn.log_sigmoid(a_param)[None, :]
+    a = jnp.exp(log_a)
+    h = a * h_prev + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a),
+                                          1e-12)) * (i * x)
+    return h, h
+
+
+def recurrent_block(p, prefix, x, cfg, cache: Optional[RGLRUCache] = None,
+                    return_state: bool = False):
+    """Griffin recurrent mixing block.  With `return_state` (cache=None):
+    returns (out, (h_last, conv_tail)) to prime a decode cache."""
+    rg = cfg.rglru
+    W = rg.lru_width or cfg.d_model
+    B, S, _ = x.shape
+
+    gate = jax.nn.gelu(dense(x, p[f"{prefix}/w_gate"]).astype(jnp.float32))
+    xr = dense(x, p[f"{prefix}/w_in"])                    # [B,S,W]
+    tail = cache.conv if cache is not None else None
+    xr, new_tail = _causal_conv(xr, p[f"{prefix}/conv_w"],
+                                p[f"{prefix}/conv_b"], tail)
+
+    xf = xr.astype(jnp.float32)
+
+    def block_diag(w, b):
+        """Griffin block-diagonal gate: [H, W/H, W/H] blocks."""
+        H = w.shape[0]
+        xh = xf.reshape(*xf.shape[:-1], H, W // H)
+        y = jnp.einsum("...hk,hkj->...hj", xh, w.astype(jnp.float32))
+        return jax.nn.sigmoid(y.reshape(*xf.shape) + b.astype(jnp.float32))
+
+    r = block_diag(p[f"{prefix}/w_a"], p[f"{prefix}/b_a"])
+    i = block_diag(p[f"{prefix}/w_x"], p[f"{prefix}/b_x"])
+
+    if cache is None:
+        h, h_last = _rglru_scan(
+            xf, r, i, p[f"{prefix}/a_param"].astype(jnp.float32),
+            rg.c_exponent)
+        new_cache = (h_last, new_tail) if return_state else None
+    else:
+        hs, h_last = rglru_step(xf[:, 0], r[:, 0], i[:, 0],
+                                p[f"{prefix}/a_param"].astype(jnp.float32),
+                                rg.c_exponent, cache.h)
+        h = hs[:, None]
+        new_cache = RGLRUCache(h_last, new_tail, cache.length + S)
+
+    out = dense(cast_bf16(h) * cast_bf16(gate), p[f"{prefix}/w_out"])
+    return out, new_cache

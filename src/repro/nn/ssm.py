@@ -1,0 +1,173 @@
+"""Mamba-2 SSD (state-space duality, arXiv:2405.21060) block.
+
+Prefill/train: the chunked SSD algorithm — intra-chunk quadratic
+(attention-like with a causal decay mask, MXU-friendly) + inter-chunk
+recurrent state passing via `lax.scan` over chunks.  Decode: the O(1)
+recurrence h' = dA·h + dt·(B ⊗ x), y = C·h' + D·x — this is what makes
+`long_500k` runnable for this family.
+
+Shapes follow the reference: d_inner = expand·d_model, P heads of
+head_dim, shared B/C across `n_groups` groups, state N per head channel.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.nn.layers import cast_bf16, dense, rms_norm
+from repro.nn.scanctl import scan_layers
+
+
+class SSMCache(NamedTuple):
+    h: jax.Array          # [B, H, hd, N]  SSM state
+    conv: jax.Array       # [B, conv-1, conv_dim]  causal-conv tail
+    length: jax.Array
+
+
+def _segsum(x):
+    """log-decay matrix: L[i,j] = sum_{j<k<=i} x[k] (lower-tri), else -inf."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    L = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, L, -jnp.inf)
+
+
+def _causal_conv(x, w, b, cache_tail=None):
+    """Depthwise causal conv, width W. x [B,S,Cd], w [W,Cd].
+    With cache_tail [B,W-1,Cd]: streaming (decode) mode."""
+    W = w.shape[0]
+    if cache_tail is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache_tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(W))
+    new_tail = xp[:, -(W - 1):, :] if W > 1 else xp[:, :0, :]
+    return jax.nn.silu((out + b[None, None, :]).astype(jnp.float32)
+                       ).astype(x.dtype), new_tail
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """SSD over full sequences.
+    xh [B,S,H,hd]; dt [B,S,H] (post-softplus); A [H] (negative);
+    Bm/Cm [B,S,G,N].  Returns y [B,S,H,hd] and final state [B,H,hd,N].
+    """
+    B_, S, H, hd = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    # pad ragged tails with dt=0 positions: decay exp(0)=1 and zero input
+    # contribution make padding state-neutral; padded outputs are sliced.
+    S0 = S
+    pad = (-S) % chunk
+    if pad:
+        zp = lambda a: jnp.pad(a, [(0, 0), (0, pad)] +  # noqa: E731
+                               [(0, 0)] * (a.ndim - 2))
+        xh, dt, Bm, Cm = zp(xh), zp(dt), zp(Bm), zp(Cm)
+        S = S + pad
+    nc = S // chunk
+    rep = H // G
+
+    def r(t, shape):
+        return t.reshape(shape)
+
+    xc = r(xh, (B_, nc, chunk, H, hd))
+    dtc = r(dt, (B_, nc, chunk, H))
+    Bc = r(Bm, (B_, nc, chunk, G, N))
+    Cc = r(Cm, (B_, nc, chunk, G, N))
+    dA = dtc * A[None, None, None, :]                    # [B,nc,Q,H]
+
+    # ---- intra-chunk (quadratic, attention-like) ----
+    Ls = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))      # [B,nc,H,Q,Q]
+    CB = jnp.einsum("bnqgs,bnkgs->bngqk",
+                    Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    CB = jnp.repeat(CB, rep, axis=2)                     # groups -> heads
+    M = CB * Ls * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_diag = jnp.einsum("bnhqk,bnkhd->bnqhd", cast_bf16(M), cast_bf16(xc),
+                        preferred_element_type=jnp.float32)
+
+    # ---- chunk states & inter-chunk recurrence ----
+    decay_to_end = jnp.exp(jnp.cumsum(dA, axis=2)[:, :, -1:, :]
+                           - jnp.cumsum(dA, axis=2))     # [B,nc,Q,H]
+    states = jnp.einsum("bnqgs,bnqh,bnqhd->bnhds",
+                        Bc.astype(jnp.float32),
+                        (dtc * decay_to_end).astype(jnp.float32),
+                        xc.astype(jnp.float32))          # [B,nc,H,hd,N]
+    chunk_decay = jnp.exp(dA.sum(axis=2))                # [B,nc,H]
+
+    def scan_fn(h, inp):
+        st, dec = inp
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    h0 = jnp.zeros((B_, H, hd, N), jnp.float32)
+    hT, h_prev = scan_layers(
+        scan_fn,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)             # [B,nc,H,hd,N]
+
+    # ---- contribution of previous state to each position ----
+    decay_from_start = jnp.exp(jnp.cumsum(dA, axis=2))   # [B,nc,Q,H]
+    Ch = jnp.repeat(Cc, rep, axis=3) if G != H else Cc   # groups -> heads
+    y_off = jnp.einsum("bnqhs,bnhds,bnqh->bnqhd",
+                       Ch.astype(jnp.float32), h_prev,
+                       decay_from_start.astype(jnp.float32))
+    y = (y_diag + y_off).reshape(B_, S, H, hd)
+    return cast_bf16(y[:, :S0]), hT
+
+
+def ssm_block(p, prefix, x, cfg, cache: Optional[SSMCache] = None,
+              return_state: bool = False):
+    """Full mamba2 block: in_proj → conv → SSD → gated norm → out_proj.
+    With `return_state` (cache=None): returns (out, (h_final, conv_tail))
+    so the caller can prime a decode cache."""
+    ssm = cfg.ssm
+    B, S, d = x.shape
+    d_in = ssm.expand * cfg.d_model
+    H = d_in // ssm.head_dim
+    hd, N, G = ssm.head_dim, ssm.state, ssm.n_groups
+    conv_dim = d_in + 2 * G * N
+
+    zxbcdt = dense(x, p[f"{prefix}/in_proj"])
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_in, d_in + conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p[f"{prefix}/dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p[f"{prefix}/A_log"].astype(jnp.float32))        # [H]
+
+    tail = cache.conv if cache is not None else None
+    xbc, new_tail = _causal_conv(xbc, p[f"{prefix}/conv_w"],
+                                 p[f"{prefix}/conv_b"], tail)
+    xh, Bm, Cm = jnp.split(xbc, [d_in, d_in + G * N], axis=-1)
+    xh = xh.reshape(B, S, H, hd)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+
+    if cache is None:
+        y, hT = ssd_chunked(xh, dt, A, Bm, Cm, ssm.chunk)
+        new_cache = (hT, new_tail) if return_state else None
+    else:
+        # O(1) decode recurrence (S == 1)
+        dA = jnp.exp(dt[:, 0] * A[None, :])                        # [B,H]
+        dBx = jnp.einsum("bgs,bh,bhd->bhds",
+                         Bm[:, 0].astype(jnp.float32),
+                         dt[:, 0], xh[:, 0].astype(jnp.float32))
+        h = cache.h * dA[..., None, None] + dBx
+        rep = H // G
+        Cr = jnp.repeat(Cm[:, 0], rep, axis=1) if G != H else Cm[:, 0]
+        y = jnp.einsum("bhs,bhds->bhd", Cr.astype(jnp.float32), h)
+        y = cast_bf16(y)[:, None]                                  # [B,1,H,hd]
+        hT = h
+        new_cache = SSMCache(hT, new_tail, cache.length + S)
+
+    y = y + xh * p[f"{prefix}/D"].astype(jnp.bfloat16)[None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(jnp.bfloat16),
+                 p[f"{prefix}/out_norm"], cfg.norm_eps)
+    out = dense(y, p[f"{prefix}/out_proj"])
+    return out, new_cache

@@ -1,0 +1,107 @@
+"""AdamW with global-norm clipping and cosine / WSD schedules.
+
+Built from scratch (no optax in this environment).  WSD (warmup — stable
+— decay) is the MiniCPM schedule (arXiv:2404.06395): linear warmup,
+long constant plateau, short exponential-ish decay tail.
+
+Optimizer state is a flat dict mirror of params (f32 moments), so it
+shards with the same logical axes as the parameters (ZeRO-style: moments
+inherit the param sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"          # "cosine" | "wsd" | "const"
+    wsd_decay_frac: float = 0.1       # last 10% of steps decay (MiniCPM)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moe_balance_weight: float = 0.01
+
+
+def learning_rate(step, cfg: OptConfig):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    if cfg.schedule == "cosine":
+        frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        decay_start = 1.0 - cfg.wsd_decay_frac
+        in_decay = t > decay_start
+        d = (t - decay_start) / jnp.maximum(cfg.wsd_decay_frac, 1e-9)
+        frac = jnp.where(in_decay,
+                         cfg.min_lr_frac ** jnp.clip(d, 0, 1), 1.0)
+    elif cfg.schedule == "const":
+        frac = jnp.ones(())
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.peak_lr * warm * frac
+
+
+def init_opt_state(params) -> Dict:
+    zeros = {k: jnp.zeros(v.shape, jnp.float32) for k, v in params.items()}
+    return {"mu": zeros,
+            "nu": {k: jnp.zeros(v.shape, jnp.float32)
+                   for k, v in params.items()},
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def _decay_mask(path: str) -> bool:
+    """No weight decay on norms/biases/scalars (standard)."""
+    leaf = path.rsplit("/", 1)[-1]
+    return not (("norm" in leaf) or leaf.endswith("_b")
+                or leaf in ("b_a", "b_x", "a_param", "A_log", "D",
+                            "dt_bias", "conv_b"))
+
+
+def apply_updates(params: Dict, grads: Dict, state: Dict, cfg: OptConfig
+                  ) -> Tuple[Dict, Dict, Dict]:
+    """One AdamW step. Returns (params', state', metrics)."""
+    step = state["step"] + 1
+    lr = learning_rate(step, cfg)
+
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm > 0 else 1.0
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    new_p, new_mu, new_nu = {}, {}, {}
+    for k, p in params.items():
+        g = grads[k].astype(jnp.float32) * scale
+        mu = b1 * state["mu"][k] + (1 - b1) * g
+        nu = b2 * state["nu"][k] + (1 - b2) * g * g
+        upd = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        if cfg.weight_decay > 0 and _decay_mask(k):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p[k] = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        new_mu[k] = mu
+        new_nu[k] = nu
+
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, metrics

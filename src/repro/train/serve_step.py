@@ -1,0 +1,51 @@
+"""Serving steps: prefill (prompt → caches) and decode (one token/step,
+greedy or temperature sampling).  These are the functions the dry-run
+lowers for the `prefill_*` / `decode_*` / `long_*` shapes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn import model as MD
+
+
+def prefill_step(params, cfg: ArchConfig, batch: Dict, smax: int,
+                 chunks=(1024, 1024)):
+    """Returns (first generated token [B], caches)."""
+    logits, caches = MD.forward_prefill(params, cfg, batch, smax,
+                                        chunks=chunks)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+
+def decode_step(params, cfg: ArchConfig, tokens, caches,
+                temperature: float = 0.0, rng: Optional[jax.Array] = None,
+                chunks=(1, 1024)):
+    """tokens [B, 1] → (next token [B], caches', logits [B, V])."""
+    logits, caches = MD.forward_decode(params, cfg, tokens, caches,
+                                       chunks=chunks)
+    if temperature > 0 and rng is not None:
+        nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+    else:
+        nxt = jnp.argmax(logits, axis=-1)
+    return nxt.astype(jnp.int32), caches, logits
+
+
+def generate(params, cfg: ArchConfig, batch: Dict, steps: int, smax: int,
+             temperature: float = 0.0, seed: int = 0,
+             chunks=(1024, 1024)):
+    """Greedy/sampled generation loop (host-side; serving example)."""
+    tok, caches = prefill_step(params, cfg, batch, smax, chunks=chunks)
+    out = [tok]
+    rng = jax.random.PRNGKey(seed)
+    for i in range(steps - 1):
+        rng, sub = jax.random.split(rng)
+        tok, caches, _ = decode_step(params, cfg, tok[:, None], caches,
+                                     temperature=temperature, rng=sub,
+                                     chunks=(1, chunks[1]))
+        out.append(tok)
+    return jnp.stack(out, axis=1)                 # [B, steps]

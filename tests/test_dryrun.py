@@ -1,0 +1,95 @@
+"""Dry-run machinery integration tests (subprocess: 512 fake devices).
+
+The full 80-cell matrix runs via ``python -m repro.launch.dryrun --all``
+(results in dryrun_report.json); here we verify the machinery end-to-end
+on the cheapest cells so regressions are caught by pytest.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, cwd=ROOT, timeout=1200)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_lm_cell_compiles_both_meshes():
+    out = _run(r"""
+import os, json
+from repro.launch.dryrun import run_cell
+for mp in (False, True):
+    rec = run_cell("qwen2.5-3b", "decode_32k", multi_pod=mp)
+    assert rec["status"] == "OK", rec
+    assert rec["per_device"]["argument_bytes"] > 0
+    assert rec["per_device"]["temp_bytes"] < 16e9   # fits v5e HBM
+print("CELLS_OK")
+""")
+    assert "CELLS_OK" in out
+
+
+@pytest.mark.slow
+def test_skip_rules_applied():
+    out = _run(r"""
+from repro.launch.dryrun import run_cell
+rec = run_cell("llama3-8b", "long_500k")
+assert rec["status"] == "SKIP" and "full-attention" in rec["reason"]
+rec2 = run_cell("mamba2-1.3b", "long_500k")
+assert rec2["status"] == "OK"
+print("SKIPS_OK")
+""")
+    assert "SKIPS_OK" in out
+
+
+@pytest.mark.slow
+def test_solver_dryrun_cli():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-m", "repro.launch.solve",
+                        "--dryrun", "--n", "6"], capture_output=True,
+                       text=True, env=env, cwd=ROOT, timeout=1200)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "SOLVER dry-run OK" in r.stdout
+
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ar = f32[8,1024]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = bf16[4,16]{1,0} all-gather(%y), dimensions={0}
+  %nope = f32[2,2]{1,0} add(%a, %b)
+  ROOT %t = (f32[1]{0}) tuple(%c)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 8 * 1024 * 4
+    assert out["all-gather"] == 4 * 16 * 2
+    assert out["count"] == 2
+
+
+def test_reduced_cfg_structurally_sound():
+    from benchmarks.roofline import reduced_cfg, unit_counts
+    from repro import configs
+    from repro.nn.model import decoder_groups, param_specs
+    for arch in configs.ARCH_IDS:
+        full, (ka, kb) = unit_counts(arch)
+        for k in (ka, kb):
+            cfg = reduced_cfg(arch, k)
+            param_specs(cfg)                      # must build
+            if cfg.encdec is None:
+                groups = decoder_groups(cfg)
+                pat = len(cfg.rglru.pattern) if cfg.rglru else 1
+                tot = sum(c * (pat if kind == "period" else 1)
+                          for kind, c, _ in groups)
+                assert tot == cfg.n_layers, (arch, k, groups)

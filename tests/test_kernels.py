@@ -1,0 +1,98 @@
+"""Per-kernel validation: Pallas fixpoint kernel vs the pure-jnp oracle.
+
+Sweeps model shapes (vars/props/terms), store batches, lane tiles and
+dtypes; asserts the comparison spec of kernels/ops.py — equal failed
+masks, exact store equality on non-failed lanes (integer lattice ⇒
+assert_array_equal is the allclose).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.fixpoint_kernel import fixpoint_pallas
+from repro.kernels.ref import fixpoint_ref
+from util import random_model, random_substores
+
+
+def _check(cm, lbs, ubs, lane_tile):
+    lbs, ubs = jnp.asarray(lbs), jnp.asarray(ubs)
+    gl, gu = ops.batched_fixpoint(cm, lbs, ubs, impl="gather")
+    rl, ru = ops.batched_fixpoint(cm, lbs, ubs, impl="scatter")
+    pl_, pu, sweeps = fixpoint_pallas(cm, lbs, ubs, lane_tile=lane_tile)
+    for (al, au) in [(rl, ru), (pl_, pu)]:
+        fg = np.asarray((gl > gu).any(axis=1))
+        fa = np.asarray((al > au).any(axis=1))
+        np.testing.assert_array_equal(fg, fa)
+        ok = ~fg
+        np.testing.assert_array_equal(np.asarray(gl)[ok], np.asarray(al)[ok])
+        np.testing.assert_array_equal(np.asarray(gu)[ok], np.asarray(au)[ok])
+    # a tile does >=1 sweep unless every lane arrived already failed
+    if not np.asarray((lbs > ubs).any(axis=1)).all():
+        assert int(np.asarray(sweeps).max()) >= 1
+
+
+@given(seed=st.integers(0, 10_000),
+       n_vars=st.integers(2, 10),
+       n_props=st.integers(1, 16),
+       lanes=st.integers(1, 9),
+       lane_tile=st.sampled_from([1, 2, 4, 8]))
+@settings(deadline=None, max_examples=15)
+def test_pallas_matches_oracle_random(seed, n_vars, n_props, lanes, lane_tile):
+    rng = np.random.default_rng(seed)
+    cm = random_model(rng, n_vars=n_vars, n_props=n_props).compile()
+    lbs, ubs = random_substores(rng, cm, lanes)
+    _check(cm, lbs, ubs, lane_tile)
+
+
+@pytest.mark.parametrize("pad_terms,pad_occ", [(8, 8), (16, 8), (8, 32)])
+def test_pallas_padding_sweep(pad_terms, pad_occ):
+    """Padding variations change K/D but never results."""
+    rng = np.random.default_rng(7)
+    m = random_model(rng, n_vars=8, n_props=12)
+    cm = m.compile(pad_terms_to=pad_terms, pad_occ_to=pad_occ)
+    lbs, ubs = random_substores(rng, cm, 6)
+    _check(cm, lbs, ubs, lane_tile=2)
+
+
+def test_pallas_on_rcpsp():
+    """Realistic model: the paper's RCPSP decomposition."""
+    from repro.core.models import rcpsp
+    inst = rcpsp.generate(6, n_resources=2, seed=11, edge_prob=0.3)
+    m, _ = rcpsp.build_model(inst)
+    cm = m.compile()
+    rng = np.random.default_rng(3)
+    lbs, ubs = random_substores(rng, cm, 10)
+    _check(cm, lbs, ubs, lane_tile=4)
+
+
+def test_pallas_all_failed_tile():
+    """A tile whose lanes all fail must exit (live-lane early stop)."""
+    from repro.core.model import Model
+    m = Model()
+    x = m.int_var(0, 5, "x")
+    m.add(x >= 3)
+    m.add(x <= 1)
+    cm = m.compile()
+    lbs = jnp.tile(cm.lb0[None], (4, 1))
+    ubs = jnp.tile(cm.ub0[None], (4, 1))
+    nl, nu, sweeps = fixpoint_pallas(cm, lbs, ubs, lane_tile=4)
+    assert bool(jnp.all(jnp.any(nl > nu, axis=1)))
+    assert int(np.asarray(sweeps).max()) < 100
+
+
+def test_ref_is_fixpoint():
+    """Oracle output is a fixpoint of the scatter sweep."""
+    from repro.core.fixpoint import sweep_scatter
+    rng = np.random.default_rng(13)
+    cm = random_model(rng, n_vars=6, n_props=10).compile()
+    lbs, ubs = random_substores(rng, cm, 5)
+    nl, nu = fixpoint_ref(cm, jnp.asarray(lbs), jnp.asarray(ubs))
+    for i in range(5):
+        if bool(jnp.any(nl[i] > nu[i])):
+            continue
+        sl, su = sweep_scatter(cm, nl[i], nu[i])
+        np.testing.assert_array_equal(np.asarray(sl), np.asarray(nl[i]))
+        np.testing.assert_array_equal(np.asarray(su), np.asarray(nu[i]))

@@ -1,0 +1,208 @@
+"""Unit tests for NN substrate internals: MoE dispatch combinatorics,
+blocked-attention masking vs a dense oracle, rope properties, causal
+conv streaming, SSD chunk invariance."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.nn import attention as A
+from repro.nn import moe as M
+from repro.nn.layers import apply_rope, rms_norm
+from repro.nn.ssm import _causal_conv, ssd_chunked
+
+
+# ---------------------------------------------------------------- MoE --
+
+def test_dispatch_indices_exact():
+    idx = jnp.array([[0, 1], [1, 0], [1, 1]])        # T=3, k=2, E=2
+    slot_token, keep, rank = M.dispatch_indices(idx, n_experts=2,
+                                                capacity=4)
+    st_ = np.asarray(slot_token).reshape(2, 4)
+    # expert 0 receives tokens 0 and 1 (in token order)
+    assert st_[0, 0] == 0 and st_[0, 1] == 1
+    # expert 1 receives tokens 0, 1, 2, 2
+    assert list(st_[1, :4]) == [0, 1, 2, 2]
+    assert bool(keep.all())
+
+
+def test_dispatch_capacity_drops_in_order():
+    idx = jnp.zeros((5, 1), jnp.int32)               # all to expert 0
+    slot_token, keep, rank = M.dispatch_indices(idx, n_experts=2,
+                                                capacity=3)
+    assert int(keep.sum()) == 3                      # first 3 kept
+    assert bool(keep[:3].all()) and not bool(keep[3:].any())
+
+
+@given(seed=st.integers(0, 1000))
+@settings(deadline=None, max_examples=10)
+def test_dispatch_roundtrip_property(seed):
+    """Every kept (token, slot) lands in a unique slot of its expert."""
+    rng = np.random.default_rng(seed)
+    T, K, E = 12, 2, 4
+    idx = jnp.asarray(rng.integers(0, E, size=(T, K)))
+    C = 6
+    slot_token, keep, rank = M.dispatch_indices(idx, E, C)
+    st_ = np.asarray(slot_token)
+    used = set()
+    for t in range(T):
+        for k in range(K):
+            if bool(keep[t, k]):
+                slot = int(idx[t, k]) * C + int(rank[t, k])
+                assert st_[slot] == t
+                assert slot not in used
+                used.add(slot)
+
+
+def test_moe_ffn_matches_dense_single_expert():
+    """E=1, top-1, ample capacity == plain SwiGLU with that expert."""
+    from repro.nn.layers import swiglu
+    from repro.configs.base import ArchConfig, MoEConfig
+    cfg = ArchConfig(name="t", family="moe", n_layers=1, d_model=16,
+                     n_heads=2, n_kv_heads=2, d_ff=32, vocab=64,
+                     moe=MoEConfig(n_experts=1, top_k=1, d_expert=32,
+                                   capacity_factor=4.0))
+    key = jax.random.PRNGKey(0)
+    p = {
+        "m/router": jax.random.normal(key, (16, 1)),
+        "m/w_gate": jax.random.normal(key, (1, 16, 32)) * 0.1,
+        "m/w_up": jax.random.normal(jax.random.PRNGKey(1), (1, 16, 32)) * 0.1,
+        "m/w_down": jax.random.normal(jax.random.PRNGKey(2), (1, 32, 16)) * 0.1,
+    }
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, 16), jnp.bfloat16)
+    y, aux = M.moe_ffn(p, "m", x, cfg)
+    ref = swiglu(x.reshape(-1, 16), p["m/w_gate"][0], p["m/w_up"][0],
+                 p["m/w_down"][0]).reshape(2, 8, 16)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ref, np.float32), atol=2e-2)
+    assert float(aux["moe_dropped"]) == 0.0
+
+
+# ---------------------------------------------------------- attention --
+
+def _dense_attention(q, k, v, mask):
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(q.shape[-1])
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("Sq,Sk,qc,kc,causal,window",
+                         [(8, 8, 4, 4, True, 0),
+                          (8, 8, 3, 5, True, 0),     # ragged chunks
+                          (8, 8, 8, 8, False, 0),
+                          (16, 16, 4, 4, True, 6),   # sliding window
+                          (1, 12, 1, 4, True, 0)])   # decode-like
+def test_blocked_attention_vs_dense(Sq, Sk, qc, kc, causal, window):
+    key = jax.random.PRNGKey(0)
+    B, H, hd = 2, 2, 8
+    q = jax.random.normal(key, (B, Sq, H, hd), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, Sk, H, hd),
+                          jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, Sk, H, hd),
+                          jnp.bfloat16)
+    q_pos = jnp.arange(Sk - Sq, Sk)                 # suffix queries
+    kv_pos = jnp.arange(Sk)
+    out = A.blocked_attention(q, k, v, q_pos, kv_pos, causal=causal,
+                              window=window, q_chunk=qc, kv_chunk=kc)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window:
+        mask &= q_pos[:, None] - kv_pos[None, :] < window
+    ref = _dense_attention(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=3e-2)
+
+
+def test_gqa_broadcast_matches_repeat():
+    """KV-head broadcast == explicitly repeated KV heads."""
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, hd = 2, 8, 4, 2, 8
+    q = jax.random.normal(key, (B, S, H, hd), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd),
+                          jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd),
+                          jnp.bfloat16)
+    pos = jnp.arange(S)
+    a = A.blocked_attention(q, k, v, pos, pos, q_chunk=4, kv_chunk=4)
+    kr = jnp.repeat(k, H // KV, axis=2)
+    vr = jnp.repeat(v, H // KV, axis=2)
+    b = A.blocked_attention(q, kr, vr, pos, pos, q_chunk=4, kv_chunk=4)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=1e-2)
+
+
+# ---------------------------------------------------------------- rope --
+
+def test_rope_preserves_norm_and_relativity():
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, 2, 16))
+    pos = jnp.arange(6)
+    y = apply_rope(x, pos, theta=10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y, np.float32),
+                                              axis=-1), rtol=2e-2)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 16))
+    dots = []
+    for p0 in (0, 5, 11):
+        qr = apply_rope(jnp.tile(q, (1, 1, 1)), jnp.array([p0]), 1e4)
+        kr = apply_rope(jnp.tile(k, (1, 1, 1)), jnp.array([p0 + 3]), 1e4)
+        dots.append(float(jnp.sum(qr.astype(jnp.float32)
+                                  * kr.astype(jnp.float32))))
+    # bf16 output quantization bounds the spread (exact in f32)
+    assert max(dots) - min(dots) < 5e-2
+
+
+# ------------------------------------------------------------- conv/ssd --
+
+def test_causal_conv_streaming_matches_batch():
+    key = jax.random.PRNGKey(0)
+    B, S, C, W = 2, 10, 4, 4
+    x = jax.random.normal(key, (B, S, C), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (W, C)) * 0.3
+    b = jnp.zeros((C,))
+    full, _ = _causal_conv(x, w, b)
+    tail = jnp.zeros((B, W - 1, C), jnp.bfloat16)
+    outs = []
+    for t in range(S):
+        o, tail = _causal_conv(x[:, t:t + 1], w, b, tail)
+        outs.append(o)
+    stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full, np.float32),
+                               np.asarray(stream, np.float32), atol=2e-2)
+
+
+def test_ssd_chunk_size_invariance():
+    """SSD output must not depend on the chunk size (math identity)."""
+    key = jax.random.PRNGKey(0)
+    B, S, H, hd, G, N = 1, 16, 2, 4, 1, 8
+    xh = jax.random.normal(key, (B, S, H, hd), jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1),
+                                           (B, S, H)))
+    Am = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (H,)) * 0.3)
+    Bm = jax.random.normal(jax.random.PRNGKey(3), (B, S, G, N),
+                           jnp.bfloat16) * 0.5
+    Cm = jax.random.normal(jax.random.PRNGKey(4), (B, S, G, N),
+                           jnp.bfloat16) * 0.5
+    y4, h4 = ssd_chunked(xh, dt, Am, Bm, Cm, chunk=4)
+    y16, h16 = ssd_chunked(xh, dt, Am, Bm, Cm, chunk=16)
+    y5, h5 = ssd_chunked(xh, dt, Am, Bm, Cm, chunk=5)   # ragged
+    np.testing.assert_allclose(np.asarray(y4, np.float32),
+                               np.asarray(y16, np.float32), atol=3e-2)
+    np.testing.assert_allclose(np.asarray(y4, np.float32),
+                               np.asarray(y5, np.float32), atol=3e-2)
+    np.testing.assert_allclose(np.asarray(h4), np.asarray(h16), atol=3e-2)
+
+
+def test_rms_norm_scale_invariance():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8), jnp.bfloat16)
+    g = jnp.ones((8,))
+    a = rms_norm(x, g, 1e-6)
+    b = rms_norm(x * 100.0, g, 1e-6)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=2e-2)

@@ -1,0 +1,47 @@
+"""Constraint-based planner (framework integration of the paper)."""
+
+import numpy as np
+import pytest
+
+from repro.distributed import planner
+
+
+def test_partition_balances_and_respects_memory():
+    costs = [5, 5, 5, 8, 8, 8, 8, 5, 5, 5, 5, 9]
+    mems = [2] * 12
+    stages, T = planner.plan_partition(costs, mems, 4, mem_cap=8,
+                                       timeout_s=120)
+    assert stages == sorted(stages)               # contiguous
+    assert set(stages) == {0, 1, 2, 3}            # no empty stage
+    loads = [sum(c for c, s in zip(costs, stages) if s == k)
+             for k in range(4)]
+    memload = [sum(c for c, s in zip(mems, stages) if s == k)
+               for k in range(4)]
+    assert max(loads) == T
+    assert max(memload) <= 8
+
+
+def test_partition_infeasible_raises():
+    with pytest.raises(ValueError):
+        planner.plan_partition([1, 1], [9, 9], 2, mem_cap=8, timeout_s=30)
+
+
+def test_microbatch_schedule_is_valid_pipeline():
+    starts, mk, res = planner.schedule_microbatches([3, 3, 3], 3,
+                                                    timeout_s=120)
+    # perfectly balanced stages: optimal makespan (M + S - 1) * t
+    assert mk == (3 + 3 - 1) * 3
+    # stage precedence within each microbatch
+    for row in starts:
+        for s in range(2):
+            assert row[s] + 3 <= row[s + 1]
+    # unit stage capacity: no overlap in any stage
+    for s in range(3):
+        times = sorted(row[s] for row in starts)
+        for a, b in zip(times, times[1:]):
+            assert a + 3 <= b
+
+
+def test_pipeline_efficiency_metric():
+    assert planner.pipeline_efficiency([3, 3, 3], 15, 3) == 1.0
+    assert planner.pipeline_efficiency([3, 3, 3], 30, 3) == 0.5

@@ -1,0 +1,107 @@
+"""RCPSP model, generator, parsers and checker."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core.models import rcpsp
+from repro.core import engine, search as S
+
+
+def test_generator_deterministic():
+    a = rcpsp.generate(8, seed=42)
+    b = rcpsp.generate(8, seed=42)
+    assert (a.durations == b.durations).all()
+    assert a.precedences == b.precedences
+    assert (a.usage == b.usage).all()
+    assert (a.capacity == b.capacity).all()
+
+
+def test_generator_feasible_by_construction():
+    """Serial schedule (all tasks in topological order) is always feasible
+    since capacities >= max single demand."""
+    inst = rcpsp.generate(10, seed=3)
+    starts = np.zeros(inst.n_tasks, dtype=np.int64)
+    t = 0
+    for i in range(inst.n_tasks):      # serial: one task at a time
+        starts[i] = t
+        t += int(inst.durations[i])
+    ok, mk = rcpsp.check_solution(inst, starts)
+    assert ok and mk == inst.horizon
+
+
+def test_overlap_booleans_consistent():
+    """In any optimal solution, b_ij must equal the overlap predicate."""
+    inst = rcpsp.generate(5, n_resources=2, seed=4, edge_prob=0.3)
+    m, h = rcpsp.build_model(inst)
+    cm = m.compile()
+    res = engine.solve(cm, n_lanes=4, n_subproblems=8,
+                       opts=S.SearchOptions(var_strategy=S.MIN_LB,
+                                            max_depth=256))
+    assert res.status == engine.OPTIMAL
+    sol = res.solution
+    s = [int(sol[v.idx]) for v in h["s"]]
+    d = [int(x) for x in inst.durations]
+    for i in range(inst.n_tasks):
+        for j in range(inst.n_tasks):
+            b = int(sol[h["b"][i][j].idx])
+            expected = int(s[i] <= s[j] < s[i] + d[i]) if d[i] > 0 else 0
+            assert b == expected, (i, j, b, expected)
+
+
+def test_patterson_parser_roundtrip():
+    """Write a Patterson-format file for a generated instance, parse it
+    back, and check equality."""
+    inst = rcpsp.generate(6, n_resources=2, seed=8)
+    lines = [f"{inst.n_tasks} {inst.n_resources}",
+             " ".join(str(int(c)) for c in inst.capacity)]
+    succ = [[] for _ in range(inst.n_tasks)]
+    for (i, j) in inst.precedences:
+        succ[i].append(j + 1)
+    for i in range(inst.n_tasks):
+        row = [int(inst.durations[i])] + \
+              [int(inst.usage[k, i]) for k in range(inst.n_resources)] + \
+              [len(succ[i])] + succ[i]
+        lines.append(" ".join(map(str, row)))
+    with tempfile.NamedTemporaryFile("w", suffix=".rcp", delete=False) as f:
+        f.write("\n".join(lines) + "\n")
+        path = f.name
+    try:
+        back = rcpsp.parse_patterson(path)
+        assert (back.durations == inst.durations).all()
+        assert sorted(back.precedences) == sorted(inst.precedences)
+        assert (back.usage == inst.usage).all()
+        assert (back.capacity == inst.capacity).all()
+    finally:
+        os.unlink(path)
+
+
+def test_precedence_respected_in_solution():
+    inst = rcpsp.generate(6, n_resources=2, seed=12, edge_prob=0.4)
+    m, h = rcpsp.build_model(inst)
+    res = engine.solve(m.compile(), n_lanes=4, n_subproblems=8,
+                       opts=S.SearchOptions(var_strategy=S.MIN_LB,
+                                            max_depth=256))
+    assert res.status == engine.OPTIMAL
+    s = [int(res.solution[v.idx]) for v in h["s"]]
+    for (i, j) in inst.precedences:
+        assert s[i] + int(inst.durations[i]) <= s[j]
+
+
+def test_zero_duration_tasks():
+    """Dummy source/sink tasks (PSPLIB style) must not break the model."""
+    inst = rcpsp.RCPSP(
+        durations=np.array([0, 3, 2, 0]),
+        precedences=[(0, 1), (0, 2), (1, 3), (2, 3)],
+        usage=np.array([[0, 2, 2, 0]]),
+        capacity=np.array([2]),
+        name="dummy-ends")
+    m, h = rcpsp.build_model(inst)
+    res = engine.solve(m.compile(), n_lanes=2, n_subproblems=4,
+                       opts=S.SearchOptions(var_strategy=S.MIN_LB,
+                                            max_depth=128))
+    assert res.status == engine.OPTIMAL
+    # resource forces serialization of tasks 1 and 2: makespan 5
+    assert res.objective == 5

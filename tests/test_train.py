@@ -1,0 +1,103 @@
+"""Training substrate: loss actually decreases, schedules, optimizer
+hygiene, deterministic data pipeline."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.pipeline import SyntheticLM
+from repro.nn import model as MD
+from repro.nn.layers import init_params
+from repro.train.optimizer import (OptConfig, apply_updates, init_opt_state,
+                                   learning_rate, _decay_mask)
+from repro.train.train_step import cross_entropy, train_step
+
+
+def test_loss_decreases_on_learnable_task():
+    cfg = configs.get_smoke("llama3-8b")
+    data = SyntheticLM(cfg, seq_len=32, global_batch=8, seed=0)
+    key = jax.random.PRNGKey(0)
+    params = init_params(MD.param_specs(cfg), key)
+    opt = init_opt_state(params)
+    ocfg = OptConfig(peak_lr=3e-3, warmup_steps=5, total_steps=60,
+                     schedule="cosine")
+    step = jax.jit(lambda p, o, b: train_step(p, o, b, cfg, ocfg,
+                                              remat=False, chunks=(8, 8)))
+    losses = []
+    for s in range(60):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(s).items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses))
+    # affine-recurrence task: must drop clearly below uniform (ln 256≈5.55)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 1.0, losses[-5:]
+
+
+def test_cross_entropy_masking():
+    logits = jnp.zeros((1, 4, 10))
+    labels = jnp.array([[1, 2, -1, -1]])
+    # uniform logits: nll == ln(10) on the 2 valid positions
+    assert abs(float(cross_entropy(logits, labels)) - np.log(10)) < 1e-5
+
+
+def test_wsd_schedule_shape():
+    cfg = OptConfig(peak_lr=1.0, warmup_steps=10, total_steps=100,
+                    schedule="wsd", wsd_decay_frac=0.2, min_lr_frac=0.1)
+    lrs = [float(learning_rate(s, cfg)) for s in range(101)]
+    assert lrs[0] < 0.2                          # warmup start
+    assert abs(lrs[10] - 1.0) < 1e-6             # peak after warmup
+    assert abs(lrs[50] - 1.0) < 1e-6             # stable plateau
+    assert lrs[95] < 0.6                         # decaying tail
+    assert abs(lrs[100] - 0.1) < 0.02            # floor
+
+
+def test_cosine_schedule_endpoints():
+    cfg = OptConfig(peak_lr=2.0, warmup_steps=10, total_steps=100,
+                    schedule="cosine", min_lr_frac=0.1)
+    assert abs(float(learning_rate(10, cfg)) - 2.0) < 1e-6
+    assert abs(float(learning_rate(100, cfg)) - 0.2) < 1e-5
+
+
+def test_decay_mask():
+    assert _decay_mask("blocks/attn/wq")
+    assert not _decay_mask("blocks/norm1")
+    assert not _decay_mask("blocks/attn/wq_b")
+    assert not _decay_mask("blocks/ssm/A_log")
+    assert not _decay_mask("blocks/rec/a_param")
+
+
+def test_grad_clipping_bounds_update():
+    params = {"w": jnp.ones((4,))}
+    grads = {"w": jnp.full((4,), 1e6)}
+    st = init_opt_state(params)
+    cfg = OptConfig(peak_lr=1.0, warmup_steps=0, total_steps=10,
+                    clip_norm=1.0, weight_decay=0.0, schedule="const")
+    p2, st2, m = apply_updates(params, grads, st, cfg)
+    assert float(m["grad_norm"]) > 1e5
+    # post-clip Adam step magnitude is bounded by ~lr
+    assert float(jnp.max(jnp.abs(p2["w"] - params["w"]))) < 3.5
+
+
+def test_data_deterministic_and_sharded():
+    cfg = configs.get_smoke("llama3-8b")
+    d = SyntheticLM(cfg, seq_len=16, global_batch=8, seed=3)
+    a = d.batch(7)
+    b = d.batch(7)
+    assert (a["tokens"] == b["tokens"]).all()
+    c = d.batch(8)
+    assert (a["tokens"] != c["tokens"]).any()
+    # shards partition deterministically
+    s0 = d.batch(7, shard=0, n_shards=2)
+    s1 = d.batch(7, shard=1, n_shards=2)
+    assert s0["tokens"].shape[0] == 4 and s1["tokens"].shape[0] == 4
+    assert (s0["tokens"] != s1["tokens"]).any()
+
+
+def test_labels_follow_affine_rule():
+    cfg = configs.get_smoke("qwen3-4b")
+    d = SyntheticLM(cfg, seq_len=12, global_batch=4, seed=1)
+    b = d.batch(0)
+    # labels are the next-token shift of the same recurrence
+    assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).all()

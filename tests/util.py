@@ -1,0 +1,59 @@
+"""Shared test helpers: random PCCP models + store perturbations."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.model import Model
+
+
+def random_model(rng: np.random.Generator, n_vars: int = 6,
+                 n_props: int = 8, dom: int = 12, max_terms: int = 3,
+                 p_reified: float = 0.4) -> Model:
+    """A random mix of plain and reified linear inequalities.
+
+    RHS is sampled around the constraint's feasible range so entailment,
+    disentailment and genuine pruning all occur.
+    """
+    m = Model("rand")
+    xs = [m.int_var(0, int(rng.integers(1, dom)), f"x{i}")
+          for i in range(n_vars)]
+    for _ in range(n_props):
+        k = int(rng.integers(1, min(max_terms, n_vars) + 1))
+        idx = rng.choice(n_vars, size=k, replace=False)
+        coefs = rng.integers(-4, 5, size=k)
+        coefs[coefs == 0] = 1
+        expr = sum(int(c) * xs[i] for c, i in zip(coefs, idx))
+        lo = sum(min(int(c) * 0, int(c) * m.ub0[xs[i].idx])
+                 for c, i in zip(coefs, idx))
+        hi = sum(max(int(c) * 0, int(c) * m.ub0[xs[i].idx])
+                 for c, i in zip(coefs, idx))
+        rhs = int(rng.integers(lo - 2, hi + 3))
+        lin = expr <= rhs
+        if rng.random() < p_reified:
+            b = m.reify(lin)
+            if rng.random() < 0.5:
+                m.add(b >= 1 if rng.random() < 0.5 else b <= 0)
+        else:
+            m.add(lin)
+    m.branch_on(xs)
+    return m
+
+
+def random_substores(rng: np.random.Generator, cm, n: int):
+    """n random consistent-or-not stores obtained by random tells."""
+    lb0, ub0 = np.asarray(cm.lb0), np.asarray(cm.ub0)
+    V = cm.n_vars
+    lbs = np.tile(lb0, (n, 1))
+    ubs = np.tile(ub0, (n, 1))
+    for i in range(n):
+        for _ in range(int(rng.integers(0, 8))):
+            v = int(rng.integers(1, V))
+            if lb0[v] >= ub0[v]:
+                continue
+            cut = int(rng.integers(lb0[v], ub0[v] + 1))
+            if rng.random() < 0.5:
+                lbs[i, v] = max(lbs[i, v], cut)
+            else:
+                ubs[i, v] = min(ubs[i, v], cut)
+    return lbs, ubs
