@@ -1,0 +1,15 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: check test bench
+
+# tier-1 suite + 2-size backend-comparison propagation smoke
+# (writes BENCH_propagation_smoke.json; see scripts/check.sh)
+check:
+	scripts/check.sh
+
+test:
+	python -m pytest -x -q
+
+bench:
+	python -m benchmarks.run --fast

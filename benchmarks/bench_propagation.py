@@ -1,70 +1,114 @@
 """Propagation-throughput microbenchmark (the paper's core claim:
 propagation parallelizes).
 
-Measures fixpoint throughput (propagator-executions/sec) of the batched
-engine as the lane count grows — the CPU-visible analogue of filling GPU
+Measures lane-batched fixpoint throughput (propagator-executions/sec) of
+every registered propagation backend (`core/backend.py`) as the lane
+count and instance size grow — the CPU-visible analogue of filling GPU
 SMs with blocks.  Near-flat time per sweep as lanes grow ⇒ the work
 vectorizes, which is what TURBO exploits on real parallel hardware.
-Compares gather sweep / scatter oracle / Pallas (interpret) kernels.
+
+  PYTHONPATH=src python -m benchmarks.bench_propagation \
+      --sizes 8 12 --lanes 1 8 32 [--backends gather scatter pallas] \
+      [--json BENCH_propagation.json]
+
+CSV columns: backend,n_tasks,lanes,ms_per_fixpoint,ms_per_lane,
+sweeps_exec,props_per_sec.  `sweeps_exec` is the backend-reported number
+of sweeps physically executed (pallas runs whole lane *tiles* in
+lockstep, so it exceeds the per-lane counts of the XLA backends on the
+same input).  `props_per_sec` is therefore computed from a
+backend-independent work measure — the gather backend's per-lane useful
+sweep count on the identical stores — so rates are comparable across
+backends: same numerator, each backend's own wall clock.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.backend import available_backends, get_backend
 from repro.core.models import rcpsp
-from repro.kernels import ops
 
 
-def bench(cm, lbs, ubs, impl: str, iters: int = 5, **kw) -> float:
-    f = lambda: ops.batched_fixpoint(cm, lbs, ubs, impl=impl, **kw)  # noqa
-    jax.block_until_ready(f())                       # compile
+def bench(cm, lbs, ubs, backend_name: str, iters: int = 5, **backend_kw):
+    """Return (seconds_per_fixpoint, total_sweeps) for one backend."""
+    backend = get_backend(backend_name, **backend_kw)
+    f = lambda: backend.fixpoint_batch(cm, lbs, ubs)  # noqa: E731
+    out = f()
+    jax.block_until_ready(out)                       # compile
+    sweeps = int(np.asarray(out[2]).sum())
     t0 = time.time()
     for _ in range(iters):
         out = f()
     jax.block_until_ready(out)
-    return (time.time() - t0) / iters
+    return (time.time() - t0) / iters, sweeps
+
+
+def perturbed_stores(cm, n_lanes: int, rng: np.random.Generator):
+    """n_lanes copies of the root store, one random tell each so lanes
+    aren't identical (fixpoints then differ per lane)."""
+    lb0 = np.tile(np.asarray(cm.lb0), (n_lanes, 1))
+    ub0 = np.tile(np.asarray(cm.ub0), (n_lanes, 1))
+    for i in range(n_lanes):
+        v = int(rng.integers(1, cm.n_vars))
+        if lb0[i, v] < ub0[i, v]:
+            lb0[i, v] += 1
+    return jnp.asarray(lb0), jnp.asarray(ub0)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--n-tasks", type=int, default=10)
-    ap.add_argument("--lanes", type=int, nargs="+",
-                    default=[1, 8, 32, 128])
+    ap.add_argument("--sizes", type=int, nargs="+", default=[8, 12],
+                    help="RCPSP task counts (>=2 sizes for the trajectory)")
+    ap.add_argument("--lanes", type=int, nargs="+", default=[1, 8, 32])
+    ap.add_argument("--backends", nargs="+", default=None,
+                    help=f"subset of {available_backends()}")
     ap.add_argument("--skip-pallas", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="also write rows as JSON (perf trajectory file)")
     args = ap.parse_args(argv)
 
-    inst = rcpsp.generate(args.n_tasks, n_resources=4, seed=0)
-    m, _ = rcpsp.build_model(inst)
-    cm = m.compile()
-    rng = np.random.default_rng(0)
+    backends = list(args.backends or available_backends())
+    if args.skip_pallas and "pallas" in backends:
+        backends.remove("pallas")
 
-    rows = ["impl,lanes,ms_per_fixpoint,ms_per_lane,props_per_sec"]
-    for L in args.lanes:
-        lb0 = np.tile(np.asarray(cm.lb0), (L, 1))
-        ub0 = np.tile(np.asarray(cm.ub0), (L, 1))
-        # randomize one tell per lane so lanes aren't identical
-        for i in range(L):
-            v = int(rng.integers(1, cm.n_vars))
-            if lb0[i, v] < ub0[i, v]:
-                lb0[i, v] += 1
-        lbs, ubs = jnp.asarray(lb0), jnp.asarray(ub0)
-        impls = ["gather", "scatter"] + \
-            ([] if args.skip_pallas else ["pallas"])
-        for impl in impls:
-            kw = dict(lane_tile=min(8, L)) if impl == "pallas" else {}
-            dt = bench(cm, lbs, ubs, impl, **kw)
-            # sweeps-to-fixpoint is data dependent; report prop-executions
-            # assuming the measured fixpoint ran to convergence once
-            pps = cm.n_props * L / dt
-            rows.append(f"{impl},{L},{dt * 1e3:.2f},"
-                        f"{dt * 1e3 / L:.3f},{pps:.3g}")
+    rng = np.random.default_rng(0)
+    header = ("backend,n_tasks,lanes,ms_per_fixpoint,ms_per_lane,"
+              "sweeps_exec,props_per_sec")
+    rows = [header]
+    records = []
+    for n_tasks in args.sizes:
+        inst = rcpsp.generate(n_tasks, n_resources=4, seed=0)
+        m, _ = rcpsp.build_model(inst)
+        cm = m.compile()
+        for L in args.lanes:
+            lbs, ubs = perturbed_stores(cm, L, rng)
+            # backend-independent work measure: useful per-lane sweeps of
+            # the canonical gather fixpoint on these exact stores
+            useful = int(np.asarray(
+                get_backend("gather").fixpoint_batch(cm, lbs, ubs)[2]).sum())
+            for name in backends:
+                kw = dict(lane_tile=min(8, L)) if name == "pallas" else {}
+                dt, sweeps = bench(cm, lbs, ubs, name, **kw)
+                pps = cm.n_props * useful / dt
+                rows.append(f"{name},{n_tasks},{L},{dt * 1e3:.2f},"
+                            f"{dt * 1e3 / L:.3f},{sweeps},{pps:.3g}")
+                records.append(dict(backend=name, n_tasks=n_tasks, lanes=L,
+                                    ms_per_fixpoint=dt * 1e3,
+                                    ms_per_lane=dt * 1e3 / L,
+                                    sweeps_exec=sweeps,
+                                    sweeps_useful=useful,
+                                    props_per_sec=pps))
     print("\n".join(rows))
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"bench": "propagation", "rows": records}, fh,
+                      indent=2)
     return rows
 
 

@@ -20,6 +20,7 @@ from typing import List
 
 from repro.core import baseline, engine
 from repro.core import search as S
+from repro.core.backend import available_backends
 from repro.core.models import rcpsp
 
 
@@ -36,12 +37,14 @@ def suite(kind: str, full: bool):
 
 
 def run_suite(name: str, instances: List[rcpsp.RCPSP], timeout_s: float,
-              lanes: int, subs: int, rows: List[str]):
-    opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=1024)
+              lanes: int, subs: int, rows: List[str],
+              backend: str = "gather"):
+    opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=1024,
+                           backend=backend)
     # §Perf P0/H1: the optimized profile caps sweeps per superstep
     # (bounded chaotic iteration; identical optima, 1.7–2.5× faster)
     opts_fast = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=1024,
-                                max_fixpoint_iters=4)
+                                max_fixpoint_iters=4, backend=backend)
     agg = {}
     for solver_name in ("sequential", "turbo-jax", "turbo-jax-opt"):
         feas = opt = nodes = 0
@@ -85,13 +88,16 @@ def main(argv=None):
     ap.add_argument("--timeout", type=float, default=None)
     ap.add_argument("--lanes", type=int, default=32)
     ap.add_argument("--subs", type=int, default=128)
+    ap.add_argument("--backend", default="gather",
+                    choices=available_backends(),
+                    help="propagation backend for the batched engine")
     args = ap.parse_args(argv)
     timeout = args.timeout or (300 if args.full else 30)
 
     rows = ["suite,solver,instances,feasible,optimal,nodes_per_sec,time_s"]
     for kind in ("patterson-like", "j30-like"):
         run_suite(kind, suite(kind, args.full), timeout, args.lanes,
-                  args.subs, rows)
+                  args.subs, rows, backend=args.backend)
     print("\n".join(rows))
     return rows
 

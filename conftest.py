@@ -5,3 +5,10 @@ Deliberately does NOT set the 512-device XLA flag — smoke tests and
 benches must see 1 device; dry-run tests spawn subprocesses with their
 own flags (see tests/test_dryrun.py).
 """
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test (full-mesh dry-runs etc.); deselect with "
+        "-m 'not slow'")

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 
 from repro.core.model import Model
 from repro.core import engine
+from repro.core import search as S
+from repro.core.backend import available_backends, get_backend
 from repro.core.fixpoint import fixpoint, sequential_fixpoint
 
 
@@ -38,8 +40,22 @@ def main():
     print(f"parallel sweep fixpoint in {it} sweeps; "
           f"== sequential chaotic iteration: {same}")
 
-    # -- solve (EPS lanes + branch & bound) --------------------------------
-    res = engine.solve(cm, n_lanes=8, n_subproblems=32)
+    # -- every propagation backend computes the same fixpoint --------------
+    lbs = jnp.tile(cm.lb0[None], (4, 1))
+    ubs = jnp.tile(cm.ub0[None], (4, 1))
+    stores = {name: get_backend(name).fixpoint_batch(cm, lbs, ubs)[:2]
+              for name in available_backends()}
+    ref = stores["gather"]
+    agree = all(bool(jnp.all(l == ref[0]) & jnp.all(u == ref[1]))
+                for l, u in stores.values())
+    print(f"backends {available_backends()} agree on the batched "
+          f"fixpoint: {agree}")
+
+    # -- solve (EPS lanes + branch & bound; opts.backend swaps the
+    #    propagation implementation, e.g. backend="pallas" for the VMEM
+    #    kernel) -----------------------------------------------------------
+    res = engine.solve(cm, n_lanes=8, n_subproblems=32,
+                       opts=S.SearchOptions(backend="gather"))
     print(f"status={res.status} makespan={res.objective} "
           f"nodes={res.n_nodes} ({res.nodes_per_sec:.0f} nodes/s)")
     starts = [int(res.solution[v.idx]) for v in s]

@@ -11,13 +11,15 @@ import time
 
 from repro.core import baseline, engine
 from repro.core import search as S
+from repro.core.backend import available_backends
 from repro.core.models import rcpsp
 
 
-def solve_one(inst, lanes, subs, timeout):
+def solve_one(inst, lanes, subs, timeout, backend="gather"):
     m, h = rcpsp.build_model(inst)
     cm = m.compile()
-    opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=1024)
+    opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=1024,
+                           backend=backend)
     t0 = time.time()
     par = engine.solve(cm, n_lanes=lanes, n_subproblems=subs, opts=opts,
                        timeout_s=timeout)
@@ -46,17 +48,20 @@ def main():
     ap.add_argument("--timeout", type=float, default=60)
     ap.add_argument("--file", default=None,
                     help="Patterson .rcp or PSPLIB .sm file")
+    ap.add_argument("--backend", default="gather",
+                    choices=available_backends(),
+                    help="propagation backend (core/backend.py)")
     args = ap.parse_args()
 
     if args.file:
         inst = (rcpsp.parse_psplib_sm(args.file)
                 if args.file.endswith(".sm")
                 else rcpsp.parse_patterson(args.file))
-        solve_one(inst, args.lanes, args.subs, args.timeout)
+        solve_one(inst, args.lanes, args.subs, args.timeout, args.backend)
         return
     for seed in range(args.count):
         inst = rcpsp.generate(args.n, n_resources=args.resources, seed=seed)
-        solve_one(inst, args.lanes, args.subs, args.timeout)
+        solve_one(inst, args.lanes, args.subs, args.timeout, args.backend)
 
 
 if __name__ == "__main__":

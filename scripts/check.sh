@@ -1,0 +1,56 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 test suite + backend-comparison propagation smoke.
+#
+#   make check            # or: scripts/check.sh
+#
+# Runs the ROADMAP tier-1 command (full pytest; collection must be clean)
+# and a 2-size bench_propagation smoke comparing all registered
+# propagation backends, writing BENCH_propagation_smoke.json at the repo
+# root so the perf trajectory populates per PR.
+#
+# Exit code: nonzero on collection errors or bench failure.  Known-failing
+# tier-1 tests (the seed ships with failing NN-substrate tests; see
+# ROADMAP.md "no worse than seed") do NOT fail the gate, but the summary
+# line is printed and recorded in the JSON for trend tracking.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1 tests =="
+pytest_log=$(mktemp)
+python -m pytest -q --continue-on-collection-errors 2>&1 | tee "$pytest_log"
+rc=${PIPESTATUS[0]}
+# pytest exit codes: 0 = all passed, 1 = some tests failed (tolerated: the
+# seed ships with known-failing NN tests); anything else means pytest did
+# not complete a run (2 interrupted, 3 internal error, 4 usage, 5 no tests)
+if [ "$rc" -ne 0 ] && [ "$rc" -ne 1 ]; then
+    echo "FAIL: pytest did not complete (exit $rc)" >&2
+    exit 1
+fi
+summary=$(grep -E "[0-9]+ (passed|failed|skipped|error)" "$pytest_log" | tail -1)
+if [ -z "$summary" ]; then
+    echo "FAIL: no pytest summary line found" >&2
+    exit 1
+fi
+if grep -qi "error" <<<"$summary"; then
+    echo "FAIL: collection errors present ($summary)" >&2
+    exit 1
+fi
+
+echo
+echo "== propagation backend smoke (2 sizes, all backends) =="
+python -m benchmarks.bench_propagation \
+    --sizes 6 8 --lanes 8 --json BENCH_propagation_smoke.json || exit 1
+
+# stamp the test summary into the bench JSON so one file carries the
+# whole check result
+python - "$summary" <<'EOF'
+import json, sys
+path = "BENCH_propagation_smoke.json"
+doc = json.load(open(path))
+doc["tier1_summary"] = sys.argv[1]
+json.dump(doc, open(path, "w"), indent=2)
+EOF
+
+echo
+echo "check OK — wrote BENCH_propagation_smoke.json ($summary)"

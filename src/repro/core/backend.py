@@ -1,0 +1,167 @@
+"""Pluggable propagation backends (DESIGN.md §2.3).
+
+The paper's central claim is that eventless propagation is **one
+bulk-parallel program**; everything above it (search, EPS, B&B) only ever
+needs two entry points:
+
+* ``fixpoint(cm, lb, ub)``        — one store to its least fixed point,
+* ``fixpoint_batch(cm, lb, ub)``  — a whole ``[n_lanes, V]`` store tensor
+  in one launch (the TURBO superstep shape: grid cells = lane tiles).
+
+`PropagationBackend` is that contract; three implementations register
+here and are selected by name everywhere a store is propagated
+(`SearchOptions.backend` → `engine.solve` → `launch/solve.py` CLI →
+benchmarks → examples):
+
+  ``gather``   variable-centric XLA sweep (`fixpoint.sweep_batch`) — the
+               CPU/GPU/TPU-portable production default;
+  ``scatter``  propagator-centric scatter-join oracle — the literal
+               reading of the paper's atomic load/store compilation;
+  ``pallas``   the VMEM-resident Pallas TPU kernel
+               (`kernels/fixpoint_kernel.fixpoint_pallas`), interpret-mode
+               on CPU, real `pallas_call` on TPU.
+
+All three compute the same least fixed point from the same single
+implementation of the propagator math (`fixpoint.candidates_tile`);
+parity is property-tested in `tests/test_backends.py`.  The comparison
+spec (see `kernels/ops.py`): equal failed-lane masks, bit-identical
+stores on non-failed lanes — failed lanes' contents are unspecified and
+search discards them.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+
+from repro.core.compile import CompiledModel
+from repro.core import fixpoint as F
+
+FixpointResult = Tuple[jax.Array, jax.Array, jax.Array, jax.Array]
+
+
+@runtime_checkable
+class PropagationBackend(Protocol):
+    """Contract every propagation implementation satisfies.
+
+    Both methods return ``(lb', ub', sweeps, converged)``; for the batch
+    form `sweeps` and `converged` are per-lane ``[L]`` arrays.
+    ``converged`` is True iff the lane reached a genuine fixed point (or
+    failed — failure is definitive); with a `max_iters` cap it may be
+    False, and callers must keep sweeping before trusting all-fixed
+    stores as solutions (search.py's §Perf H1 soundness guard).
+    """
+
+    name: str
+
+    def fixpoint(self, cm: CompiledModel, lb: jax.Array, ub: jax.Array, *,
+                 max_iters: Optional[int] = None) -> FixpointResult:
+        ...
+
+    def fixpoint_batch(self, cm: CompiledModel, lb: jax.Array,
+                       ub: jax.Array, *,
+                       max_iters: Optional[int] = None) -> FixpointResult:
+        ...
+
+
+class GatherBackend:
+    """Variable-centric gather sweep, batched as one XLA tensor program."""
+
+    name = "gather"
+
+    def fixpoint(self, cm, lb, ub, *, max_iters=None):
+        return F.fixpoint(cm, lb, ub, max_iters=max_iters)
+
+    def fixpoint_batch(self, cm, lb, ub, *, max_iters=None):
+        return F.fixpoint_batch(cm, lb, ub, max_iters=max_iters)
+
+
+class ScatterBackend:
+    """Propagator-centric scatter-join form (the reference semantics)."""
+
+    name = "scatter"
+
+    def fixpoint(self, cm, lb, ub, *, max_iters=None):
+        return F.fixpoint(cm, lb, ub, max_iters=max_iters, use_scatter=True)
+
+    def fixpoint_batch(self, cm, lb, ub, *, max_iters=None):
+        return F.fixpoint_batch(cm, lb, ub, max_iters=max_iters,
+                                use_scatter=True)
+
+
+@partial(jax.jit, static_argnames=("lane_tile", "max_sweeps", "interpret"))
+def _pallas_batch(cm, lb, ub, lane_tile, max_sweeps, interpret):
+    from repro.kernels.fixpoint_kernel import fixpoint_pallas
+    return fixpoint_pallas(cm, lb, ub, lane_tile=lane_tile,
+                           max_sweeps=max_sweeps, interpret=interpret)
+
+
+class PallasBackend:
+    """VMEM-resident Pallas fixpoint kernel (TPU; interpret-mode on CPU).
+
+    `lane_tile` is the grid-cell width — the number of lanes whose two
+    stores co-reside in VMEM for the whole loop (the TURBO shared-memory
+    analogue).  The effective tile is clamped to the batch size so tiny
+    batches don't pay padding sweeps.
+
+    The per-lane `sweeps` this backend reports are *tile-granular*: a
+    tile sweeps in lockstep until nothing in it changes, so the count
+    exceeds the XLA backends' per-lane useful-sweep counts on the same
+    input (and so do `n_sweeps` search stats under ``backend="pallas"``).
+    Stores and convergence are unaffected — only the counter semantics
+    differ.
+    """
+
+    name = "pallas"
+
+    def __init__(self, lane_tile: int = 8,
+                 interpret: Optional[bool] = None,
+                 max_sweeps: int = 16384):
+        self.lane_tile = lane_tile
+        # default: real pallas_call on TPU, interpreter everywhere else
+        self.interpret = (jax.default_backend() != "tpu"
+                          if interpret is None else interpret)
+        self.max_sweeps = max_sweeps
+
+    def fixpoint(self, cm, lb, ub, *, max_iters=None):
+        nlb, nub, sweeps, conv = self.fixpoint_batch(
+            cm, lb[None], ub[None], max_iters=max_iters)
+        return nlb[0], nub[0], sweeps[0], conv[0]
+
+    def fixpoint_batch(self, cm, lb, ub, *, max_iters=None):
+        cap = self.max_sweeps if max_iters is None else int(max_iters)
+        tile = max(1, min(self.lane_tile, lb.shape[0]))
+        return _pallas_batch(cm, lb, ub, lane_tile=tile, max_sweeps=cap,
+                             interpret=self.interpret)
+
+
+_REGISTRY: Dict[str, Callable[..., PropagationBackend]] = {}
+
+
+def register_backend(name: str,
+                     factory: Callable[..., PropagationBackend]) -> None:
+    """Register a backend factory under `name` (last registration wins —
+    deliberate, so downstream code can swap in a tuned kernel)."""
+    _REGISTRY[name] = factory
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name: str, **opts) -> PropagationBackend:
+    """Instantiate a registered backend; `opts` go to its factory."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown propagation backend {name!r}; "
+            f"available: {', '.join(available_backends())}") from None
+    return factory(**opts)
+
+
+register_backend("gather", GatherBackend)
+register_backend("scatter", ScatterBackend)
+register_backend("pallas", PallasBackend)

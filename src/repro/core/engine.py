@@ -3,8 +3,13 @@
 Execution hierarchy (the GPU→TPU mapping of DESIGN.md §2):
 
     mesh devices (shard_map)  ↔  GPU / SMs            (EPS pool is sharded)
-    lanes per device (vmap)   ↔  CUDA blocks           (one subproblem each)
+    lanes per device (batch)  ↔  CUDA blocks           (one subproblem each)
     propagator sweep (tensor) ↔  threads within block  (one dense op)
+
+Propagation inside the superstep is **one lane-batched backend call**
+over the whole [n_lanes, V] store tensor (`SearchOptions.backend`
+selects gather / scatter / pallas — see core/backend.py); only the
+branch/backtrack bookkeeping is vmapped per lane.
 
 Branch & bound: each superstep ends with a cross-lane ``min`` and a
 ``lax.pmin`` across every mesh axis — the analogue of TURBO's shared
@@ -104,7 +109,10 @@ def solve(cm: CompiledModel,
 
     Single-device by default; pass ``mesh`` + ``lane_axes`` (mesh axis names
     to shard lanes/subproblems over) for the multi-device engine.  `subs`
-    overrides the EPS pool (used by tests and the dry-run).
+    overrides the EPS pool (used by tests and the dry-run).  The
+    propagation backend is picked per `opts.backend` ("gather" default;
+    "pallas" runs the VMEM kernel, interpret-mode on CPU), e.g.
+    ``solve(cm, opts=SearchOptions(backend="pallas"))``.
     """
     opts = opts or S.SearchOptions()
     t0 = time.time()

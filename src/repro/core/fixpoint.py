@@ -26,6 +26,13 @@ Propagator semantics for row  b ⇔ Σ_j a_j·x_j ≤ c :
 
 Candidates are clamped into the initial box (see compile.py) so all
 arithmetic provably stays in dtype range.
+
+There is exactly **one** implementation of the propagator semantics:
+`candidates_tile` / `sweep_tile`, written over raw tables and lane-batched
+``[L, V]`` stores.  Everything else — the single-store `sweep`, the
+scatter oracle, the lane-batched `fixpoint_batch` used by the search
+superstep, and the Pallas VMEM kernel (`kernels/fixpoint_kernel.py`
+imports `sweep_tile`) — is a thin wrapper around it (DESIGN.md §2.3).
 """
 
 from __future__ import annotations
@@ -53,34 +60,34 @@ def _cdiv(p, q):
     return -jnp.floor_divide(-p, q)
 
 
-def propagator_candidates(cm: CompiledModel, lb: jax.Array, ub: jax.Array
-                          ) -> Tuple[jax.Array, jax.Array]:
-    """All tells of one sweep, as candidate bounds per (prop, slot).
+def candidates_tile(lb: jax.Array, ub: jax.Array, vidx, coef, rhs, bidx
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """All tells of one sweep for a ``[L, V]`` tile of stores.
 
-    Returns (cand_lb, cand_ub), each ``[P+1, K+1]``; slot K is the
-    reified-boolean (entailment) slot.  Neutral candidates are ±big so they
-    vanish under the min/max joins.  Shared by the gather sweep, the
-    scatter oracle and the sequential baseline — there is exactly one
-    implementation of the propagator math.
+    Pure-array form (no `CompiledModel`) so the Pallas kernel body can call
+    it on VMEM refs; every other propagation path wraps it.  Returns
+    (cand_lb, cand_ub), each ``[L, P+1, K+1]``; slot K is the
+    reified-boolean (entailment) slot.  Neutral candidates are ±big so
+    they vanish under the min/max joins.
     """
-    a = cm.coef                     # [P1, K]
-    v = cm.vidx
-    c = cm.rhs                      # [P1]
-    xl = lb[v]
-    xu = ub[v]
+    dt = lb.dtype
+    a = coef[None, :, :]                                  # [1, P1, K]
+    c = rhs[None, :, None]                                # [1, P1, 1]
+    xl = jnp.take(lb, vidx, axis=1)                       # [L, P1, K]
+    xu = jnp.take(ub, vidx, axis=1)
     tl = jnp.where(a > 0, a * xl, a * xu)     # min of a_k x_k (0 when a==0)
     tu = jnp.where(a > 0, a * xu, a * xl)     # max of a_k x_k
-    smin = tl.sum(-1)
+    smin = tl.sum(-1)                                     # [L, P1]
     smax = tu.sum(-1)
 
-    btrue = (lb[cm.bidx] >= 1)[:, None]       # ask b
-    bfalse = (ub[cm.bidx] <= 0)[:, None]      # ask ¬b
+    btrue = (jnp.take(lb, bidx, axis=1) >= 1)[:, :, None]     # ask b
+    bfalse = (jnp.take(ub, bidx, axis=1) <= 0)[:, :, None]    # ask ¬b
 
-    neu_ub, neu_lb = _neutrals(cm.jdtype)
+    neu_ub, neu_lb = _neutrals(dt)
     safe_a = jnp.where(a == 0, 1, a)
 
     # direction 1: Σ a x ≤ c (guard: b true)
-    slack1 = c[:, None] - (smin[:, None] - tl)
+    slack1 = c - (smin[:, :, None] - tl)
     ub1 = jnp.where((a > 0) & btrue, _fdiv(slack1, safe_a), neu_ub)
     lb1 = jnp.where((a < 0) & btrue, _cdiv(slack1, safe_a), neu_lb)
 
@@ -88,39 +95,76 @@ def propagator_candidates(cm: CompiledModel, lb: jax.Array, ub: jax.Array
     #   min(a' x) = -max(a x) = -tu ;  S'min = -smax
     na = -a
     safe_na = jnp.where(na == 0, 1, na)
-    slack2 = (-c - 1)[:, None] - (-smax[:, None] + tu)
+    slack2 = (-c - 1) - (-smax[:, :, None] + tu)
     ub2 = jnp.where((na > 0) & bfalse, _fdiv(slack2, safe_na), neu_ub)
     lb2 = jnp.where((na < 0) & bfalse, _cdiv(slack2, safe_na), neu_lb)
 
-    term_ub = jnp.minimum(ub1, ub2)           # [P1, K]
+    term_ub = jnp.minimum(ub1, ub2)           # [L, P1, K]
     term_lb = jnp.maximum(lb1, lb2)
 
     # entailment slot (tells on the reified boolean)
-    one = jnp.asarray(1, cm.jdtype)
-    zero = jnp.asarray(0, cm.jdtype)
-    reif_lb = jnp.where(smax <= c, one, neu_lb)    # entailed  → b ≥ 1
-    reif_ub = jnp.where(smin > c, zero, neu_ub)    # disentail → b ≤ 0
+    one = jnp.asarray(1, dt)
+    zero = jnp.asarray(0, dt)
+    reif_lb = jnp.where(smax <= rhs[None, :], one, neu_lb)   # entailed → b≥1
+    reif_ub = jnp.where(smin > rhs[None, :], zero, neu_ub)   # disent. → b≤0
 
-    cand_ub = jnp.concatenate([term_ub, reif_ub[:, None]], axis=1)
-    cand_lb = jnp.concatenate([term_lb, reif_lb[:, None]], axis=1)
+    cand_ub = jnp.concatenate([term_ub, reif_ub[:, :, None]], axis=2)
+    cand_lb = jnp.concatenate([term_lb, reif_lb[:, :, None]], axis=2)
     return cand_lb, cand_ub
+
+
+def sweep_tile(lb, ub, vidx, coef, rhs, bidx, occ_prop, occ_slot,
+               box_lo, box_hi) -> Tuple[jax.Array, jax.Array]:
+    """One eventless sweep over a ``[L, V]`` tile of stores (gather form).
+
+    Pure-array form shared verbatim by the XLA backends and the Pallas
+    kernel body — the single source of truth for the sweep semantics.
+    Variable v reduces over its occurrence list — no scatter, no atomics,
+    deterministic by construction.
+    """
+    cand_lb, cand_ub = candidates_tile(lb, ub, vidx, coef, rhs, bidx)
+    # variable-centric join: gather each var's occurrence candidates
+    k1 = cand_ub.shape[2]
+    flat_ub = cand_ub.reshape(cand_ub.shape[0], -1)       # [L, P1*(K+1)]
+    flat_lb = cand_lb.reshape(cand_lb.shape[0], -1)
+    occ = (occ_prop * k1 + occ_slot).reshape(-1)          # [V*D]
+    V, D = occ_prop.shape
+    g_ub = jnp.take(flat_ub, occ, axis=1).reshape(lb.shape[0], V, D).min(-1)
+    g_lb = jnp.take(flat_lb, occ, axis=1).reshape(lb.shape[0], V, D).max(-1)
+    # clamp candidates into the initial box (overflow guard; sound because
+    # box_lo-1/box_hi+1 still cross the opposite bound on failure)
+    g_ub = jnp.maximum(g_ub, box_lo[None, :])
+    g_lb = jnp.minimum(g_lb, box_hi[None, :])
+    return jnp.maximum(lb, g_lb), jnp.minimum(ub, g_ub)
+
+
+def propagator_candidates(cm: CompiledModel, lb: jax.Array, ub: jax.Array
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Single-store view of `candidates_tile` (each ``[P+1, K+1]``).
+
+    Kept as the entry point for the scatter forms and the sequential
+    SELECT-rule semantics.
+    """
+    cand_lb, cand_ub = candidates_tile(lb[None], ub[None], cm.vidx, cm.coef,
+                                       cm.rhs, cm.bidx)
+    return cand_lb[0], cand_ub[0]
 
 
 def sweep(cm: CompiledModel, lb: jax.Array, ub: jax.Array
           ) -> Tuple[jax.Array, jax.Array]:
-    """One parallel iteration: D(P₁) ⊔ … ⊔ D(Pₙ) applied to (lb, ub).
+    """One parallel iteration: D(P₁) ⊔ … ⊔ D(Pₙ) applied to one (lb, ub)."""
+    nlb, nub = sweep_tile(lb[None], ub[None], cm.vidx, cm.coef, cm.rhs,
+                          cm.bidx, cm.occ_prop, cm.occ_slot,
+                          cm.box_lo, cm.box_hi)
+    return nlb[0], nub[0]
 
-    Gather form: variable v reduces over its occurrence list — no scatter,
-    no atomics, deterministic by construction.
-    """
-    cand_lb, cand_ub = propagator_candidates(cm, lb, ub)
-    g_ub = cand_ub[cm.occ_prop, cm.occ_slot].min(-1)   # [V]
-    g_lb = cand_lb[cm.occ_prop, cm.occ_slot].max(-1)
-    # clamp candidates into the initial box (overflow guard; sound because
-    # box_lo-1/box_hi+1 still cross the opposite bound on failure)
-    g_ub = jnp.maximum(g_ub, cm.box_lo)
-    g_lb = jnp.minimum(g_lb, cm.box_hi)
-    return jnp.maximum(lb, g_lb), jnp.minimum(ub, g_ub)
+
+def sweep_batch(cm: CompiledModel, lb: jax.Array, ub: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Gather sweep over lane-batched ``[L, V]`` stores — one tensor op for
+    the whole batch (the TURBO shape: every lane's sweep in one launch)."""
+    return sweep_tile(lb, ub, cm.vidx, cm.coef, cm.rhs, cm.bidx,
+                      cm.occ_prop, cm.occ_slot, cm.box_lo, cm.box_hi)
 
 
 def sweep_scatter(cm: CompiledModel, lb: jax.Array, ub: jax.Array
@@ -139,6 +183,12 @@ def sweep_scatter(cm: CompiledModel, lb: jax.Array, ub: jax.Array
     new_ub = ub.at[flat_v].min(jnp.maximum(cand_ub.reshape(-1), cm.box_lo[flat_v]))
     new_lb = lb.at[flat_v].max(jnp.minimum(cand_lb.reshape(-1), cm.box_hi[flat_v]))
     return new_lb, new_ub
+
+
+def sweep_scatter_batch(cm: CompiledModel, lb: jax.Array, ub: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Scatter sweep over lane-batched ``[L, V]`` stores (vmapped joins)."""
+    return jax.vmap(partial(sweep_scatter, cm))(lb, ub)
 
 
 @partial(jax.jit, static_argnames=("max_iters", "stop_on_fail", "use_scatter"))
@@ -176,6 +226,54 @@ def fixpoint(cm: CompiledModel, lb: jax.Array, ub: jax.Array,
     init = (lb, ub, jnp.asarray(True), jnp.asarray(0, jnp.int32))
     lb, ub, changed, iters = lax.while_loop(cond, body, init)
     converged = jnp.logical_not(changed) | jnp.any(lb > ub)
+    return lb, ub, iters, converged
+
+
+@partial(jax.jit, static_argnames=("max_iters", "stop_on_fail", "use_scatter"))
+def fixpoint_batch(cm: CompiledModel, lb: jax.Array, ub: jax.Array,
+                   max_iters: Optional[int] = None, stop_on_fail: bool = True,
+                   use_scatter: bool = False):
+    """Lane-batched fixpoint: one `while_loop` over the whole ``[L, V]``
+    store tensor, each sweep a single batched tensor op (`sweep_batch`).
+
+    This is the TURBO superstep shape — one propagation launch for all
+    lanes — replacing the per-lane `fixpoint` under `vmap` whose
+    while_loop degenerates to lockstep select-masking anyway.  Per-lane
+    semantics are preserved exactly: a lane participates in a sweep iff
+    its own per-lane cond (changed ∧ it < max_iters ∧ ¬failed) holds, so
+    results, sweep counts and convergence flags are bit-identical to the
+    vmapped form (idempotence of ⊔ makes the frozen-lane masking exact).
+
+    Returns (lb', ub', sweeps[L], converged[L]).
+    """
+    step = sweep_scatter_batch if use_scatter else sweep_batch
+    L = lb.shape[0]
+
+    def lane_live(lb_, ub_, changed, it):
+        ok = changed
+        if max_iters is not None:
+            ok = ok & (it < max_iters)
+        if stop_on_fail:
+            ok = ok & jnp.logical_not(jnp.any(lb_ > ub_, axis=1))
+        return ok                                          # bool[L]
+
+    def cond(st):
+        lb_, ub_, changed, it = st
+        return jnp.any(lane_live(lb_, ub_, changed, it))
+
+    def body(st):
+        lb_, ub_, changed, it = st
+        active = lane_live(lb_, ub_, changed, it)
+        nlb, nub = step(cm, lb_, ub_)
+        nlb = jnp.where(active[:, None], nlb, lb_)
+        nub = jnp.where(active[:, None], nub, ub_)
+        ch = jnp.any((nlb != lb_) | (nub != ub_), axis=1)
+        changed = jnp.where(active, ch, changed)
+        return nlb, nub, changed, it + active.astype(jnp.int32)
+
+    init = (lb, ub, jnp.ones((L,), bool), jnp.zeros((L,), jnp.int32))
+    lb, ub, changed, iters = lax.while_loop(cond, body, init)
+    converged = jnp.logical_not(changed) | jnp.any(lb > ub, axis=1)
     return lb, ub, iters, converged
 
 

@@ -18,9 +18,16 @@ Branching is (var, m) with left = `x ≤ m`, right = `x ≥ m+1`; value
 strategies: `m = lb` (assign-min, the scheduling default) or the domain
 midpoint (split).  Variable strategies: input order / min domain / min lb.
 
-All control flow is mask-based so the step function vmaps; a lane that is
+All control flow is mask-based so the step functions vmap; a lane that is
 `done` keeps sweeping its converged store, which is a no-op by
 idempotence (Thm. 2) — correctness never depends on lane divergence.
+
+Superstep structure (the TURBO shape, DESIGN.md §2.3): propagation is
+**hoisted out of the per-lane vmap**.  `lanes_step` runs three phases —
+a vmapped `lane_load` (subproblem dispatch + B&B bound tell), then **one
+lane-batched backend fixpoint over the whole [n_lanes, V] store tensor**
+(`SearchOptions.backend` picks gather / scatter / pallas), then a vmapped
+`lane_commit` (solution recording, backtrack-or-branch bookkeeping).
 """
 
 from __future__ import annotations
@@ -35,7 +42,7 @@ import numpy as np
 from jax import lax
 
 from repro.core.compile import CompiledModel
-from repro.core.fixpoint import fixpoint
+from repro.core.backend import get_backend
 
 # variable-selection strategies
 INPUT_ORDER = "input_order"
@@ -56,6 +63,12 @@ class SearchOptions:
     max_depth: int = 2048
     max_fixpoint_iters: Optional[int] = None
     stop_on_first: bool = False      # satisfaction: stop at first solution
+    # propagation backend for the superstep's lane-batched fixpoint:
+    # "gather" | "scatter" | "pallas" (see core/backend.py)
+    backend: str = "gather"
+    # backend construction options (e.g. lane_tile/interpret for pallas);
+    # must be hashable — a tuple of (key, value) pairs
+    backend_opts: Tuple = ()
 
 
 class LaneState(NamedTuple):
@@ -165,21 +178,35 @@ def _select_branch(cm: CompiledModel, lb, ub, opts: SearchOptions):
     return var, m, jnp.any(unfixed)
 
 
-def lane_step(cm: CompiledModel, subs_lb, subs_ub, n_lanes: int,
-              opts: SearchOptions, st: LaneState, gbest) -> LaneState:
-    """One superstep of one lane: load / propagate / record / backtrack-or-branch.
+class LanePrep(NamedTuple):
+    """Per-lane carry between `lane_load` and `lane_commit` — everything
+    the post-propagation bookkeeping needs besides the propagated store."""
+    lb: jax.Array            # i[V] store with decision + bound tells applied
+    ub: jax.Array            # i[V]
+    root_lb: jax.Array       # i[V]
+    root_ub: jax.Array       # i[V]
+    depth: jax.Array         # i32
+    next_sub: jax.Array      # i32
+    fresh: jax.Array         # bool
+    active: jax.Array        # bool — lane participates in this superstep
 
-    `subs_lb/ub`: the device-local subproblem pool [S, V]; lane i consumes
-    subproblems i, i+n_lanes, … (the paper's static EPS assignment).
-    `gbest`: scalar global incumbent bound (already cross-lane/device min'd).
+
+def lane_load(cm: CompiledModel, subs_lb, subs_ub, opts: SearchOptions,
+              st: LaneState, gbest) -> LanePrep:
+    """Pre-propagation phase of one lane: subproblem load + B&B tell.
+
+    `subs_lb/ub`: the device-local subproblem pool [S, V] (assignment
+    happens in dispatch_pool — the shared per-device queue, TURBO's
+    dynamic EPS; `done` is also decided there).
+    `gbest`: scalar global incumbent bound (already cross-lane/device
+    min'd).  Runs under vmap; propagation itself is hoisted out into the
+    backend's lane-batched fixpoint (see `lanes_step`).
     """
     S = subs_lb.shape[0]
     dt = cm.jdtype
     big = jnp.asarray(jnp.iinfo(dt).max // 4, dt)
 
     # -- 1. load the dispatcher-assigned subproblem when fresh -------------
-    # (assignment happens in dispatch_pool — the shared per-device queue,
-    #  TURBO's dynamic EPS; `done` is also decided there)
     can_load = st.next_sub < S
     load = st.fresh & can_load
     sub = jnp.clip(st.next_sub, 0, S - 1)
@@ -189,17 +216,31 @@ def lane_step(cm: CompiledModel, subs_lb, subs_ub, n_lanes: int,
     ub = jnp.where(load, root_ub, st.ub)
     depth = jnp.where(load, 0, st.depth)
     next_sub = jnp.where(load, UNASSIGNED, st.next_sub)  # consumed
-    done = st.done
-    fresh = st.fresh & ~load & ~done
-    active = ~done & ~fresh
+    fresh = st.fresh & ~load & ~st.done
+    active = ~st.done & ~fresh
 
-    # -- 2. branch & bound tell + propagate to fixpoint --------------------
+    # -- 2. branch & bound tell ------------------------------------------
     if cm.obj_var >= 0:
         inc = jnp.minimum(gbest, st.best_obj)      # global ⊓ own incumbent
         bound = jnp.where(inc < big, inc - 1, big)
         ub = ub.at[cm.obj_var].min(jnp.where(active, bound, big))
-    lb, ub, sweeps, converged = fixpoint(cm, lb, ub,
-                                         max_iters=opts.max_fixpoint_iters)
+    return LanePrep(lb=lb, ub=ub, root_lb=root_lb, root_ub=root_ub,
+                    depth=depth, next_sub=next_sub, fresh=fresh,
+                    active=active)
+
+
+def lane_commit(cm: CompiledModel, opts: SearchOptions, st: LaneState,
+                pre: LanePrep, lb, ub, sweeps, converged) -> LaneState:
+    """Post-propagation phase of one lane: record / backtrack-or-branch.
+
+    `lb`, `ub`, `sweeps`, `converged` are this lane's slice of the batched
+    backend fixpoint.  Runs under vmap.
+    """
+    dt = cm.jdtype
+    big = jnp.asarray(jnp.iinfo(dt).max // 4, dt)
+    root_lb, root_ub = pre.root_lb, pre.root_ub
+    depth, next_sub = pre.depth, pre.next_sub
+    fresh, active, done = pre.fresh, pre.active, st.done
 
     failed = jnp.any(lb > ub)
     # a fully-fixed store is only a SOLUTION at a (per-lane) fixed point:
@@ -281,10 +322,18 @@ def lane_step(cm: CompiledModel, subs_lb, subs_ub, n_lanes: int,
 
 def lanes_step(cm: CompiledModel, subs_lb, subs_ub, opts: SearchOptions,
                st: LaneState, gbest) -> LaneState:
-    """vmap of lane_step over the lane axis (shared tables broadcast)."""
-    n_lanes = st.depth.shape[0]
-    f = partial(lane_step, cm, subs_lb, subs_ub, n_lanes, opts)
-    return jax.vmap(f, in_axes=(0, None))(st, gbest)
+    """One superstep over all lanes: vmapped load → **one** lane-batched
+    backend fixpoint over the whole [n_lanes, V] store tensor → vmapped
+    commit.  Only the bookkeeping is vmapped; propagation is a single
+    batched call (one kernel invocation per superstep — the TURBO shape).
+    """
+    pre = jax.vmap(partial(lane_load, cm, subs_lb, subs_ub, opts),
+                   in_axes=(0, None))(st, gbest)
+    backend = get_backend(opts.backend, **dict(opts.backend_opts))
+    lb, ub, sweeps, converged = backend.fixpoint_batch(
+        cm, pre.lb, pre.ub, max_iters=opts.max_fixpoint_iters)
+    return jax.vmap(partial(lane_commit, cm, opts))(
+        st, pre, lb, ub, sweeps, converged)
 
 
 def lanes_best(st: LaneState, dt):

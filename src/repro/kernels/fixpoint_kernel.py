@@ -10,15 +10,17 @@ constant/global memory.
 The kernel body is the *eventless sweep*: every propagator's candidate
 bounds are computed as dense [P, K] tensor ops on the MXU/VPU, then each
 variable gathers the min/max over its occurrence list (a [V, D] gather —
-TPU-native join, no atomics; see fixpoint.py for the semantics and the
-scatter oracle it is tested against).  A `lax.while_loop` iterates sweeps
-until no bound changes or a domain empties — fixpoint detection is one
-reduction, standing in for the paper's has_changed[3] + __syncthreads().
+TPU-native join, no atomics).  The sweep itself is `fixpoint.sweep_tile`,
+the **same** function the XLA gather backend runs — one implementation of
+the semantics, two execution strategies.  A `lax.while_loop` iterates
+sweeps until no bound changes or a domain empties — fixpoint detection is
+one reduction, standing in for the paper's has_changed[3] +
+__syncthreads().
 
-VMEM budget (per grid cell, int32): stores 2·TL·V, tables ≈ 2·P·K +
-2·V·D + 4·V; with the j30-class sizes (V≈3k, P≈5k, K=32, D≈128) that is
-≈ 2.1 MB of tables + 24 KB/lane — comfortably inside the ~16 MB VMEM of a
-TPU v5e core with TL up to ~512 lanes.
+VMEM budget (per grid cell, int32; see the table in DESIGN.md §2): stores
+2·TL·V, tables ≈ 2·P·K + 2·V·D + 4·V; with the j30-class sizes (V≈3k,
+P≈5k, K=32, D≈128) that is ≈ 2.1 MB of tables + 24 KB/lane — comfortably
+inside the ~16 MB VMEM of a TPU v5e core with TL up to ~512 lanes.
 
 Validated in interpret mode on CPU (this container has no TPU); the ops
 used (take/gather along axis 0, elementwise, while_loop) lower on TPU
@@ -34,66 +36,13 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-
-def _sweep_tile(lb, ub, vidx, coef, rhs, bidx, occ_prop, occ_slot,
-                box_lo, box_hi):
-    """One eventless sweep over a (TL, V) tile of stores. Pure jnp —
-    shared by the kernel body and (jit'd directly) by the ops wrapper's
-    reference path."""
-    dt = lb.dtype
-    neu = jnp.asarray(jnp.iinfo(dt).max // 4, dt)
-
-    a = coef[None, :, :]                                  # [1, P1, K]
-    xl = jnp.take(lb, vidx, axis=1)                       # [TL, P1, K]
-    xu = jnp.take(ub, vidx, axis=1)
-    tl_ = jnp.where(a > 0, a * xl, a * xu)
-    tu_ = jnp.where(a > 0, a * xu, a * xl)
-    smin = tl_.sum(-1)                                    # [TL, P1]
-    smax = tu_.sum(-1)
-
-    btrue = (jnp.take(lb, bidx, axis=1) >= 1)[:, :, None]
-    bfalse = (jnp.take(ub, bidx, axis=1) <= 0)[:, :, None]
-    c = rhs[None, :, None]                                # [1, P1, 1]
-
-    safe_a = jnp.where(a == 0, 1, a)
-    slack1 = c - (smin[:, :, None] - tl_)
-    ub1 = jnp.where((a > 0) & btrue, jnp.floor_divide(slack1, safe_a), neu)
-    lb1 = jnp.where((a < 0) & btrue,
-                    -jnp.floor_divide(-slack1, safe_a), -neu)
-
-    na = -a
-    safe_na = jnp.where(na == 0, 1, na)
-    slack2 = (-c - 1) - (-smax[:, :, None] + tu_)
-    ub2 = jnp.where((na > 0) & bfalse, jnp.floor_divide(slack2, safe_na), neu)
-    lb2 = jnp.where((na < 0) & bfalse,
-                    -jnp.floor_divide(-slack2, safe_na), -neu)
-
-    term_ub = jnp.minimum(ub1, ub2)                       # [TL, P1, K]
-    term_lb = jnp.maximum(lb1, lb2)
-    reif_lb = jnp.where(smax <= rhs[None, :], jnp.asarray(1, dt), -neu)
-    reif_ub = jnp.where(smin > rhs[None, :], jnp.asarray(0, dt), neu)
-
-    cand_ub = jnp.concatenate([term_ub, reif_ub[:, :, None]], axis=2)
-    cand_lb = jnp.concatenate([term_lb, reif_lb[:, :, None]], axis=2)
-
-    # variable-centric join: gather each var's occurrence candidates
-    k1 = cand_ub.shape[2]
-    flat_ub = cand_ub.reshape(cand_ub.shape[0], -1)       # [TL, P1*(K+1)]
-    flat_lb = cand_lb.reshape(cand_lb.shape[0], -1)
-    occ = (occ_prop * k1 + occ_slot).reshape(-1)          # [V*D]
-    g_ub = jnp.take(flat_ub, occ, axis=1).reshape(
-        lb.shape[0], occ_prop.shape[0], occ_prop.shape[1]).min(-1)
-    g_lb = jnp.take(flat_lb, occ, axis=1).reshape(
-        lb.shape[0], occ_prop.shape[0], occ_prop.shape[1]).max(-1)
-
-    g_ub = jnp.maximum(g_ub, box_lo[None, :])
-    g_lb = jnp.minimum(g_lb, box_hi[None, :])
-    return jnp.maximum(lb, g_lb), jnp.minimum(ub, g_ub)
+from repro.core.fixpoint import sweep_tile
 
 
 def _fixpoint_kernel(vidx_ref, coef_ref, rhs_ref, bidx_ref, occp_ref,
                      occs_ref, boxlo_ref, boxhi_ref, lb_ref, ub_ref,
-                     out_lb_ref, out_ub_ref, sweeps_ref, *, max_sweeps: int):
+                     out_lb_ref, out_ub_ref, sweeps_ref, conv_ref,
+                     *, max_sweeps: int):
     lb = lb_ref[...]
     ub = ub_ref[...]
     tables = (vidx_ref[...], coef_ref[...], rhs_ref[...], bidx_ref[...],
@@ -106,15 +55,20 @@ def _fixpoint_kernel(vidx_ref, coef_ref, rhs_ref, bidx_ref, occp_ref,
 
     def body(st):
         lb_, ub_, _, it = st
-        nlb, nub = _sweep_tile(lb_, ub_, *tables)
+        nlb, nub = sweep_tile(lb_, ub_, *tables)
         changed = jnp.any((nlb != lb_) | (nub != ub_))
         return nlb, nub, changed, it + 1
 
-    lb, ub, _, it = lax.while_loop(
+    lb, ub, changed, it = lax.while_loop(
         cond, body, (lb, ub, jnp.asarray(True), jnp.asarray(0, jnp.int32)))
     out_lb_ref[...] = lb
     out_ub_ref[...] = ub
     sweeps_ref[...] = jnp.full(sweeps_ref.shape, it, jnp.int32)
+    # per-lane convergence: failure is definitive; otherwise the tile-wide
+    # no-change flag (conservative for lanes that individually fixed early,
+    # which is sound — search just keeps them propagating a no-op sweep)
+    failed = jnp.any(lb > ub, axis=1)
+    conv_ref[...] = (jnp.logical_not(changed) | failed).astype(jnp.int32)
 
 
 def fixpoint_pallas(cm, lb, ub, *, lane_tile: int = 8,
@@ -123,7 +77,7 @@ def fixpoint_pallas(cm, lb, ub, *, lane_tile: int = 8,
 
     Grid = ceil(L / lane_tile); each cell iterates its tile to fixpoint
     independently (cells stop early when all their lanes failed).
-    Returns (lb', ub', sweeps[L]).
+    Returns (lb', ub', sweeps[L], converged[L]).
     """
     L, V = lb.shape
     pad = (-L) % lane_tile
@@ -139,8 +93,9 @@ def fixpoint_pallas(cm, lb, ub, *, lane_tile: int = 8,
 
     whole = lambda *shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))  # noqa: E731
     tiled = pl.BlockSpec((lane_tile, V), lambda i: (i, 0))
+    lane1d = pl.BlockSpec((lane_tile,), lambda i: (i,))
 
-    out_lb, out_ub, sweeps = pl.pallas_call(
+    out_lb, out_ub, sweeps, conv = pl.pallas_call(
         functools.partial(_fixpoint_kernel, max_sweeps=max_sweeps),
         grid=grid,
         in_specs=[
@@ -148,13 +103,14 @@ def fixpoint_pallas(cm, lb, ub, *, lane_tile: int = 8,
             whole(V, D), whole(V, D), whole(V), whole(V),
             tiled, tiled,
         ],
-        out_specs=[tiled, tiled, pl.BlockSpec((lane_tile,), lambda i: (i,))],
+        out_specs=[tiled, tiled, lane1d, lane1d],
         out_shape=[
             jax.ShapeDtypeStruct((Lp, V), dt),
             jax.ShapeDtypeStruct((Lp, V), dt),
+            jax.ShapeDtypeStruct((Lp,), jnp.int32),
             jax.ShapeDtypeStruct((Lp,), jnp.int32),
         ],
         interpret=interpret,
     )(cm.vidx, cm.coef, cm.rhs, cm.bidx, cm.occ_prop, cm.occ_slot,
       cm.box_lo, cm.box_hi, lb, ub)
-    return out_lb[:L], out_ub[:L], sweeps[:L]
+    return out_lb[:L], out_ub[:L], sweeps[:L], conv[:L].astype(bool)

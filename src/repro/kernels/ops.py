@@ -1,11 +1,12 @@
 """jit'd public wrappers for the propagation kernels.
 
-`batched_fixpoint` picks the best available implementation:
+`batched_fixpoint` is a thin façade over the propagation-backend registry
+(`core/backend.py`) kept for kernel-level tests and benchmarks:
 
 * ``impl="pallas"`` — the VMEM-resident Pallas kernel (TPU target;
   interpret-mode on CPU),
-* ``impl="gather"`` — the vmapped XLA gather sweep (fast on CPU, and the
-  production fallback on any backend),
+* ``impl="gather"`` — the lane-batched XLA gather sweep (fast on CPU, and
+  the production fallback on any backend),
 * ``impl="scatter"`` — the scatter oracle (reference).
 
 All three compute the same least fixed point (tests sweep shapes/dtypes
@@ -25,12 +26,9 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
+from repro.core.backend import get_backend
 from repro.core.compile import CompiledModel
-from repro.core.fixpoint import fixpoint
-from repro.kernels.fixpoint_kernel import fixpoint_pallas
-from repro.kernels.ref import fixpoint_ref
 
 
 @partial(jax.jit, static_argnames=("impl", "lane_tile", "max_sweeps",
@@ -40,15 +38,11 @@ def batched_fixpoint(cm: CompiledModel, lb: jax.Array, ub: jax.Array,
                      max_sweeps: int = 16384, interpret: bool = True):
     """Propagate a [L, V] batch of stores to their least fixed points."""
     if impl == "pallas":
-        nlb, nub, _ = fixpoint_pallas(cm, lb, ub, lane_tile=lane_tile,
-                                      max_sweeps=max_sweeps,
-                                      interpret=interpret)
-        return nlb, nub
-    if impl == "gather":
-        def one(l, u):
-            nl, nu, _, _ = fixpoint(cm, l, u, max_iters=max_sweeps)
-            return nl, nu
-        return jax.vmap(one)(lb, ub)
-    if impl == "scatter":
-        return fixpoint_ref(cm, lb, ub, max_sweeps=max_sweeps)
-    raise ValueError(f"unknown impl {impl!r}")
+        backend = get_backend("pallas", lane_tile=lane_tile,
+                              max_sweeps=max_sweeps, interpret=interpret)
+        nlb, nub, _, _ = backend.fixpoint_batch(cm, lb, ub)
+    else:
+        backend = get_backend(impl)
+        nlb, nub, _, _ = backend.fixpoint_batch(cm, lb, ub,
+                                                max_iters=max_sweeps)
+    return nlb, nub

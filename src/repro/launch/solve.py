@@ -32,6 +32,14 @@ def main():
     ap.add_argument("--timeout", type=float, default=120)
     ap.add_argument("--fast", action="store_true",
                     help="optimized profile (capped fixpoint, §Perf P0)")
+    from repro.core.backend import available_backends
+    ap.add_argument("--backend", default="gather",
+                    choices=available_backends(),
+                    help="propagation backend for the superstep fixpoint "
+                         "(core/backend.py; pallas = VMEM kernel, "
+                         "interpret-mode on CPU)")
+    ap.add_argument("--lane-tile", type=int, default=8,
+                    help="pallas backend: lanes per VMEM grid cell")
     ap.add_argument("--dryrun", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--file", default=None)
@@ -48,8 +56,11 @@ def main():
                               seed=args.seed)
     m, _ = rcpsp.build_model(inst)
     cm = m.compile()
+    backend_opts = ((("lane_tile", args.lane_tile),)
+                    if args.backend == "pallas" else ())
     opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=1024,
-                           max_fixpoint_iters=4 if args.fast else None)
+                           max_fixpoint_iters=4 if args.fast else None,
+                           backend=args.backend, backend_opts=backend_opts)
 
     if args.dryrun:
         from repro.launch.mesh import make_production_mesh

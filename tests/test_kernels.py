@@ -9,7 +9,9 @@ assert_array_equal is the allclose).
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")  # property tests need it; never hard-error
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels import ops
 from repro.kernels.fixpoint_kernel import fixpoint_pallas
@@ -21,7 +23,9 @@ def _check(cm, lbs, ubs, lane_tile):
     lbs, ubs = jnp.asarray(lbs), jnp.asarray(ubs)
     gl, gu = ops.batched_fixpoint(cm, lbs, ubs, impl="gather")
     rl, ru = ops.batched_fixpoint(cm, lbs, ubs, impl="scatter")
-    pl_, pu, sweeps = fixpoint_pallas(cm, lbs, ubs, lane_tile=lane_tile)
+    pl_, pu, sweeps, conv = fixpoint_pallas(cm, lbs, ubs,
+                                            lane_tile=lane_tile)
+    assert bool(np.asarray(conv).all())   # uncapped run must converge
     for (al, au) in [(rl, ru), (pl_, pu)]:
         fg = np.asarray((gl > gu).any(axis=1))
         fa = np.asarray((al > au).any(axis=1))
@@ -78,7 +82,7 @@ def test_pallas_all_failed_tile():
     cm = m.compile()
     lbs = jnp.tile(cm.lb0[None], (4, 1))
     ubs = jnp.tile(cm.ub0[None], (4, 1))
-    nl, nu, sweeps = fixpoint_pallas(cm, lbs, ubs, lane_tile=4)
+    nl, nu, sweeps, _ = fixpoint_pallas(cm, lbs, ubs, lane_tile=4)
     assert bool(jnp.all(jnp.any(nl > nu, axis=1)))
     assert int(np.asarray(sweeps).max()) < 100
 

@@ -6,9 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.nn import attention as A
+pytest.importorskip("hypothesis")  # property tests need it; never hard-error
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.nn import attention as A  # noqa: E402
 from repro.nn import moe as M
 from repro.nn.layers import apply_rope, rms_norm
 from repro.nn.ssm import _causal_conv, ssd_chunked

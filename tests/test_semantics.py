@@ -10,11 +10,13 @@ GNF     — the tabular guarded-command lowering preserves semantics
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core.fixpoint import (fixpoint, sweep, sweep_scatter,
+pytest.importorskip("hypothesis")  # property tests need it; never hard-error
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.fixpoint import (fixpoint, sweep, sweep_scatter,  # noqa: E402
                                  sequential_fixpoint)
-from util import random_model, random_substores
+from util import random_model, random_substores  # noqa: E402
 
 SETTINGS = dict(deadline=None, max_examples=20)
 
