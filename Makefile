@@ -1,9 +1,9 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: check test bench
+.PHONY: check test bench docs-check
 
-# tier-1 suite + 2-size backend-comparison propagation smoke
+# tier-1 suite + propagation smoke + model-zoo solver smoke + docs check
 # (writes BENCH_propagation_smoke.json; see scripts/check.sh)
 check:
 	scripts/check.sh
@@ -13,3 +13,7 @@ test:
 
 bench:
 	python -m benchmarks.run --fast
+
+# README/DESIGN path references resolve + quickstart commands dry-run
+docs-check:
+	python scripts/docs_check.py

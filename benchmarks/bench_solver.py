@@ -10,15 +10,24 @@ feas / opt / nodes-per-sec / time.  The GPU-side claim that survives CPU
 emulation is *throughput scaling with lanes* (bench_propagation.py) and
 *identical objectives* (determinism, Thm 6); wall-clock superiority needs
 the real accelerator.
+
+``--zoo`` adds a per-model section over the whole model zoo (DESIGN.md
+§10: rcpsp, nqueens, coloring, knapsack, jobshop) through the
+EPS-decomposed engine; ``--zoo-smoke --json BENCH_propagation_smoke.json``
+is the `make check` tier — small instances, records merged into the bench
+JSON as its `solver` section.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 from typing import List
 
 from repro.core import baseline, engine
+from repro.core import models as zoo
 from repro.core import search as S
 from repro.core.backend import available_backends
 from repro.core.models import rcpsp
@@ -81,6 +90,52 @@ def run_suite(name: str, instances: List[rcpsp.RCPSP], timeout_s: float,
     return rows
 
 
+def run_zoo(timeout_s: float, lanes: int, eps_target: int, rows: List[str],
+            backend: str = "gather", smoke: bool = False, seed: int = 0):
+    """Per-model solver numbers across the whole zoo (DESIGN.md §10):
+    nodes/s and time-to-optimum through the EPS-decomposed engine.
+    Returns the JSON-able records for the BENCH `solver` section."""
+    opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=512,
+                           backend=backend)
+    records = []
+    for name in sorted(zoo.ZOO):
+        mod = zoo.ZOO[name]
+        inst = (zoo.small_instance(name, seed=seed) if smoke
+                else zoo.bench_instance(name, seed=seed))
+        m, h = mod.build_model(inst)
+        cm = m.compile()
+        res = engine.solve(cm, n_lanes=lanes, eps_target=eps_target,
+                           opts=opts, timeout_s=timeout_s)
+        # True/False = checked; None = nothing to check (timeout/UNSAT)
+        checked = zoo.ground_check(mod, inst, h, res)
+        rows.append(f"zoo,{name},{backend},{res.status},{res.objective},"
+                    f"{res.nodes_per_sec:.0f},{res.wall_s:.2f},{checked}")
+        # time to the *proven* optimum: wall clock until B&B returned
+        # OPTIMAL, jit compile included (the honest CPU-emulation figure —
+        # incumbent timestamps would need engine support)
+        records.append(dict(
+            model=name, instance=inst.name, backend=backend,
+            status=res.status, objective=res.objective,
+            n_nodes=res.n_nodes, nodes_per_sec=res.nodes_per_sec,
+            n_supersteps=res.n_supersteps,
+            time_to_proven_optimum_s=(
+                res.wall_s if res.status == engine.OPTIMAL else None),
+            wall_s=res.wall_s, ground_check=checked))
+    return records
+
+
+def write_solver_json(path: str, records) -> None:
+    """Merge the zoo records into `path` as its `solver` section,
+    preserving whatever the propagation smoke already wrote there."""
+    doc = {}
+    if os.path.exists(path):
+        with open(path) as fh:
+            doc = json.load(fh)
+    doc["solver"] = records
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=2)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -91,14 +146,43 @@ def main(argv=None):
     ap.add_argument("--backend", default="gather",
                     choices=available_backends(),
                     help="propagation backend for the batched engine")
+    ap.add_argument("--zoo", action="store_true",
+                    help="also run the model-zoo section (all 5 models)")
+    ap.add_argument("--zoo-size", choices=("small", "bench"), default=None,
+                    help="zoo instance tier (default: bench for --zoo, "
+                         "small for --zoo-smoke)")
+    ap.add_argument("--zoo-smoke", action="store_true",
+                    help="ONLY the zoo on small instances (the make-check "
+                         "tier); implies --zoo, skips the RCPSP tables")
+    ap.add_argument("--eps-target", type=int, default=64,
+                    help="EPS pool size for the zoo runs (DESIGN.md §9)")
+    ap.add_argument("--json", default=None,
+                    help="merge the zoo records into this JSON file as its "
+                         "`solver` section (e.g. BENCH_propagation_smoke"
+                         ".json)")
     args = ap.parse_args(argv)
+    if args.json and not (args.zoo or args.zoo_smoke):
+        ap.error("--json records the zoo section; pass --zoo or --zoo-smoke")
     timeout = args.timeout or (300 if args.full else 30)
 
-    rows = ["suite,solver,instances,feasible,optimal,nodes_per_sec,time_s"]
-    for kind in ("patterson-like", "j30-like"):
-        run_suite(kind, suite(kind, args.full), timeout, args.lanes,
-                  args.subs, rows, backend=args.backend)
+    rows = []
+    if not args.zoo_smoke:
+        rows.append(
+            "suite,solver,instances,feasible,optimal,nodes_per_sec,time_s")
+        for kind in ("patterson-like", "j30-like"):
+            run_suite(kind, suite(kind, args.full), timeout, args.lanes,
+                      args.subs, rows, backend=args.backend)
+    records = None
+    if args.zoo or args.zoo_smoke:
+        rows.append("zoo,model,backend,status,objective,nodes_per_sec,"
+                    "time_s,ground_check")
+        smoke = (args.zoo_size == "small" if args.zoo_size
+                 else args.zoo_smoke)
+        records = run_zoo(timeout, args.lanes, args.eps_target, rows,
+                          backend=args.backend, smoke=smoke)
     print("\n".join(rows))
+    if args.json and records is not None:
+        write_solver_json(args.json, records)
     return rows
 
 

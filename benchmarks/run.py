@@ -26,10 +26,11 @@ def main() -> None:
                            (["--skip-pallas"] if fast else []))
     print(f"# bench_propagation,{(time.time()-t0)*1e6:.0f},wall_us")
 
-    print("\n# === Table 1 analogue (solver suites) ===")
+    print("\n# === Table 1 analogue (solver suites + model zoo) ===")
     from benchmarks import bench_solver
     t0 = time.time()
-    bench_solver.main(["--timeout", "20"] if fast else [])
+    bench_solver.main(["--timeout", "20", "--zoo", "--zoo-size", "small"]
+                      if fast else ["--zoo"])
     print(f"# bench_solver,{(time.time()-t0)*1e6:.0f},wall_us")
 
     print("\n# === planner (pipeline scheduling as RCPSP) ===")

@@ -1,0 +1,59 @@
+"""Model zoo driver: solve every workload (DESIGN.md §10) through the
+EPS-decomposed engine and ground-check the solutions.
+
+  PYTHONPATH=src python examples/model_zoo.py                 # all models
+  PYTHONPATH=src python examples/model_zoo.py --model nqueens \
+      --backend pallas --eps-target 32
+"""
+
+import argparse
+import time
+
+from repro.core import engine
+from repro.core import models as zoo
+from repro.core import search as S
+from repro.core.backend import available_backends
+
+
+def solve_one(name, args):
+    mod = zoo.ZOO[name]
+    inst = (zoo.bench_instance(name, seed=args.seed) if args.bench
+            else zoo.small_instance(name, seed=args.seed))
+    m, h = mod.build_model(inst)
+    cm = m.compile()
+    opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=512,
+                           backend=args.backend)
+    t0 = time.time()
+    res = engine.solve(cm, n_lanes=args.lanes, eps_target=args.eps_target,
+                       opts=opts, timeout_s=args.timeout)
+    line = (f"{inst.name:24s} {res.status:8s} obj={res.objective} "
+            f"nodes={res.n_nodes:6d} ({res.nodes_per_sec:7.0f}/s) "
+            f"supersteps={res.n_supersteps:5d} {time.time() - t0:5.1f}s")
+    checked = zoo.ground_check(mod, inst, h, res)
+    if checked is not None:
+        line += f" | ground-check {'OK' if checked else 'FAIL'}"
+    print(line)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="all",
+                    choices=["all"] + sorted(zoo.ZOO))
+    ap.add_argument("--backend", default="gather",
+                    choices=available_backends())
+    ap.add_argument("--lanes", type=int, default=16)
+    ap.add_argument("--eps-target", type=int, default=64,
+                    help="EPS pool size (DESIGN.md §9); 1 = single root")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--timeout", type=float, default=60)
+    ap.add_argument("--bench", action="store_true",
+                    help="larger benchmark-tier instances")
+    args = ap.parse_args()
+
+    names = sorted(zoo.ZOO) if args.model == "all" else [args.model]
+    for name in names:
+        solve_one(name, args)
+
+
+if __name__ == "__main__":
+    main()

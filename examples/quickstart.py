@@ -51,10 +51,11 @@ def main():
     print(f"backends {available_backends()} agree on the batched "
           f"fixpoint: {agree}")
 
-    # -- solve (EPS lanes + branch & bound; opts.backend swaps the
-    #    propagation implementation, e.g. backend="pallas" for the VMEM
-    #    kernel) -----------------------------------------------------------
-    res = engine.solve(cm, n_lanes=8, n_subproblems=32,
+    # -- solve (EPS lanes + branch & bound, DESIGN.md §9: eps_target
+    #    decomposes the root into ~32 subproblems that seed and replenish
+    #    the 8 lanes; opts.backend swaps the propagation implementation,
+    #    e.g. backend="pallas" for the VMEM kernel) ------------------------
+    res = engine.solve(cm, n_lanes=8, eps_target=32,
                        opts=S.SearchOptions(backend="gather"))
     print(f"status={res.status} makespan={res.objective} "
           f"nodes={res.n_nodes} ({res.nodes_per_sec:.0f} nodes/s)")

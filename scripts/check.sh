@@ -3,10 +3,12 @@
 #
 #   make check            # or: scripts/check.sh
 #
-# Runs the ROADMAP tier-1 command (full pytest; collection must be clean)
-# and a 2-size bench_propagation smoke comparing all registered
-# propagation backends, writing BENCH_propagation_smoke.json at the repo
-# root so the perf trajectory populates per PR.
+# Runs the ROADMAP tier-1 command (full pytest; collection must be clean),
+# a 2-size bench_propagation smoke comparing all registered propagation
+# backends, a model-zoo solver smoke (all five models through the EPS
+# engine, DESIGN.md §10) and the docs check, writing
+# BENCH_propagation_smoke.json (propagation rows + `solver` section) at
+# the repo root so the perf trajectory populates per PR.
 #
 # Exit code: nonzero on collection errors or bench failure.  Known-failing
 # tier-1 tests (the seed ships with failing NN-substrate tests; see
@@ -41,6 +43,15 @@ echo
 echo "== propagation backend smoke (2 sizes, all backends) =="
 python -m benchmarks.bench_propagation \
     --sizes 6 8 --lanes 8 --json BENCH_propagation_smoke.json || exit 1
+
+echo
+echo "== model-zoo solver smoke (5 models, EPS engine) =="
+python -m benchmarks.bench_solver \
+    --zoo-smoke --json BENCH_propagation_smoke.json || exit 1
+
+echo
+echo "== docs check (README/DESIGN references + quickstart dry-run) =="
+python scripts/docs_check.py || exit 1
 
 # stamp the test summary into the bench JSON so one file carries the
 # whole check result

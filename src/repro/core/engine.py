@@ -6,6 +6,13 @@ Execution hierarchy (the GPU→TPU mapping of DESIGN.md §2):
     lanes per device (batch)  ↔  CUDA blocks           (one subproblem each)
     propagator sweep (tensor) ↔  threads within block  (one dense op)
 
+EPS flow (DESIGN.md §9): ``solve`` decomposes the root into
+``eps_target`` consistent subproblems (`eps.decompose`), seeds the lane
+pool from them, and every superstep (`search.lanes_step`) replenishes
+idle lanes from the remaining pool before propagating.  ``eps_target=1``
+degrades to single-root search — the baseline the EPS speedup tests
+compare against.
+
 Propagation inside the superstep is **one lane-batched backend call**
 over the whole [n_lanes, V] store tensor (`SearchOptions.backend`
 selects gather / scatter / pallas — see core/backend.py); only the
@@ -13,7 +20,9 @@ branch/backtrack bookkeeping is vmapped per lane.
 
 Branch & bound: each superstep ends with a cross-lane ``min`` and a
 ``lax.pmin`` across every mesh axis — the analogue of TURBO's shared
-global-memory best bound, made deterministic by the lattice join.
+global-memory best bound, made deterministic by the lattice join — so
+every lane prunes against the best objective found *anywhere*
+(DESIGN.md §9 bound sharing).
 
 The solve loop runs in fixed-size jitted *chunks* so the host can enforce
 wall-clock timeouts (the paper uses 5 min / 30 s budgets) and so the
@@ -65,9 +74,9 @@ class SolveResult:
 def _chunk_body(cm: CompiledModel, subs_lb, subs_ub, opts: S.SearchOptions,
                 stop_on_first: bool, axis_names, carry):
     st, gbest, gdone, it, pool_head = carry
-    st, new_head = S.dispatch_pool(st, pool_head[0], subs_lb.shape[0])
+    st, new_head = S.lanes_step(cm, subs_lb, subs_ub, opts, st, gbest,
+                                pool_head[0])
     pool_head = new_head[None].astype(jnp.int32)
-    st = S.lanes_step(cm, subs_lb, subs_ub, opts, st, gbest)
     best = jnp.min(st.best_obj)
     done = jnp.all(st.done)
     any_sol = jnp.any(st.has_sol)
@@ -104,8 +113,17 @@ def solve(cm: CompiledModel,
           mesh: Optional[jax.sharding.Mesh] = None,
           lane_axes: tuple = (),
           subs: Optional[tuple] = None,
+          eps_target: Optional[int] = None,
           ) -> SolveResult:
     """Solve a compiled model.
+
+    ``eps_target`` controls the EPS decomposition (DESIGN.md §9): the
+    root is split into ~``eps_target`` consistent subproblems that seed
+    the shared lane pool; idle lanes replenish from it every superstep.
+    ``eps_target=1`` is single-root search (one lane does all the work —
+    the comparison baseline); the default ``None`` uses
+    ``n_subproblems`` or ``4 * n_lanes``, the paper's
+    several-subproblems-per-worker EPS rule of thumb.
 
     Single-device by default; pass ``mesh`` + ``lane_axes`` (mesh axis names
     to shard lanes/subproblems over) for the multi-device engine.  `subs`
@@ -117,8 +135,9 @@ def solve(cm: CompiledModel,
     opts = opts or S.SearchOptions()
     t0 = time.time()
     if subs is None:
-        n_subproblems = n_subproblems or 4 * n_lanes
-        subs_lb, subs_ub = eps.decompose(cm, n_subproblems, opts)
+        target = (eps_target if eps_target is not None
+                  else (n_subproblems or 4 * n_lanes))
+        subs_lb, subs_ub = eps.decompose(cm, target, opts)
     else:
         subs_lb, subs_ub = subs
     subs_lb = jnp.asarray(subs_lb)

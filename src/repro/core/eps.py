@@ -1,5 +1,5 @@
 """Embarrassingly-parallel-search decomposition (paper §TURBO, after
-Malapert/Régin/Rezgui 2016).
+Malapert/Régin/Rezgui 2016; DESIGN.md §9).
 
 TURBO "dynamically generates subproblems following a variant of EPS"; we
 generate them by iterative splitting on the host: repeatedly split the
@@ -7,6 +7,10 @@ widest-frontier subproblem with the search branching rule, propagate both
 children with the *same* fixpoint engine, and drop failed children.  The
 resulting pool partitions the root search space (left `x ≤ m` / right
 `x ≥ m+1` are complementary), so lane-level DFS over the pool is complete.
+
+The pool feeds `engine.solve(eps_target=...)`: it seeds the per-device
+lane pools, and `search.dispatch_pool` replenishes idle lanes from the
+remainder every superstep (DESIGN.md §9).
 """
 
 from __future__ import annotations

@@ -223,6 +223,16 @@ class Model:
         single reified propagator which implements all four asks)."""
         self.props.append(ReifLinLe(b.idx, lin))
 
+    def neq(self, a, b) -> None:
+        """a ≠ b for linear expressions, via the paper's reified-disjunction
+        encoding: b< ⇔ (a < b)  ∥  b> ⇔ (a > b)  ∥  b< + b> ≥ 1.  This is
+        the decomposition the model zoo (DESIGN.md §10) uses for all
+        disequality/disjunctive constraints so everything stays ReifLinLe."""
+        ea, eb = LinExpr.of(a), LinExpr.of(b)
+        lt = self.reify(ea < eb, "neq_lt")
+        gt = self.reify(ea > eb, "neq_gt")
+        self.add(lt + gt >= 1)
+
     def iff_and(self, b: IntVar, lins: Sequence[LinLe]) -> None:
         """⟦b ⇔ (φ₁ ∧ ... ∧ φ_m)⟧ via the standard decomposition
         bᵢ ⇔ φᵢ  ∥  b ⇔ ∧ bᵢ  (the conjunction itself compiles to linear:

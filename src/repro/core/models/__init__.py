@@ -1,0 +1,74 @@
+"""The model zoo (DESIGN.md §10).
+
+Every workload compiles through the same `ReifLinLe` guarded normal form
+(`core/model.py` → `core/compile.py`), so each runs unchanged on every
+propagation backend and through the EPS-decomposed engine.  A zoo module
+exposes the uniform protocol:
+
+* ``generate(size..., seed=0)`` — seeded reproducible instance;
+* ``build_model(inst) -> (Model, handles)`` — handles include
+  ``check_vars``, the IntVars (in order) that ``check_solution`` expects;
+* ``check_solution(inst, values) -> (feasible, objective)`` — ground
+  checker independent of the solver, with `objective` in *model* terms
+  (i.e. what the engine minimizes — negated profit for knapsack).
+
+``ZOO`` maps the canonical names to the modules; ``small_instance``
+yields the seeded smoke instances used by tests, `make check`'s solver
+section and `examples/model_zoo.py`.
+"""
+
+from __future__ import annotations
+
+from repro.core.models import coloring, jobshop, knapsack, nqueens, rcpsp
+
+ZOO = {
+    "rcpsp": rcpsp,
+    "nqueens": nqueens,
+    "coloring": coloring,
+    "knapsack": knapsack,
+    "jobshop": jobshop,
+}
+
+
+# per-model generate() kwargs for the two instance tiers:
+# smoke (seconds-to-optimum on every backend) and bench (heavier)
+_TIERS = {
+    "rcpsp": (dict(n_tasks=5, n_resources=2, edge_prob=0.3),
+              dict(n_tasks=8, n_resources=3, edge_prob=0.25)),
+    "nqueens": (dict(n=5), dict(n=7)),
+    "coloring": (dict(n=6, edge_prob=0.5), dict(n=9, edge_prob=0.45)),
+    "knapsack": (dict(n=6), dict(n=10)),
+    "jobshop": (dict(n_jobs=2, n_machines=2), dict(n_jobs=3, n_machines=2)),
+}
+assert set(_TIERS) == set(ZOO)
+
+
+def _instance(name: str, tier: int, seed: int):
+    try:
+        kw = _TIERS[name][tier]
+    except KeyError:
+        raise ValueError(
+            f"unknown zoo model {name!r}; have {sorted(ZOO)}") from None
+    return ZOO[name].generate(seed=seed, **kw)
+
+
+def small_instance(name: str, seed: int = 0):
+    """Seeded small instance of each zoo model: solvable to proven
+    optimum in seconds on every backend (the smoke/CI tier)."""
+    return _instance(name, 0, seed)
+
+
+def bench_instance(name: str, seed: int = 0):
+    """Larger seeded instance per model (the benchmark tier)."""
+    return _instance(name, 1, seed)
+
+
+def ground_check(mod, inst, handles, res):
+    """Ground-check a SolveResult against `mod.check_solution`: True/False
+    for a checked solution, None when there is no solution to check
+    (timeout/UNSAT — distinct from a checker failure)."""
+    if res.solution is None:
+        return None
+    vals = [int(res.solution[v.idx]) for v in handles["check_vars"]]
+    ok, obj = mod.check_solution(inst, vals)
+    return bool(ok and obj == res.objective)

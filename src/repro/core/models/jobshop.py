@@ -1,0 +1,114 @@
+"""Job-shop scheduling — disjunctive machines, lowered to ReifLinLe
+(DESIGN.md §10).
+
+Each job is a fixed sequence of operations, one per machine, with
+durations; operations of different jobs on the same machine must not
+overlap.  Start variable `s_{j,k}` per operation:
+
+    within-job precedence:  s_{j,k} + d_{j,k} ≤ s_{j,k+1}        (plain)
+    machine disjunction:    b ⇔ (end_a ≤ start_b)  ∥
+                            b' ⇔ (end_b ≤ start_a) ∥  b + b' ≥ 1  (reified)
+    makespan:               s_{j,last} + d ≤ mk,  minimize mk
+
+The disjunction is the same before/after encoding the quickstart example
+uses; RCPSP's overlap booleans generalize it to cumulative resources —
+job-shop is the unit-capacity member of the family.
+
+`generate(n_jobs, n_machines, seed)` samples a square-ish Taillard-style
+instance: each job visits every machine once in a random order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import numpy as np
+
+from repro.core.model import Model
+
+
+@dataclasses.dataclass
+class JobShop:
+    machines: np.ndarray       # i[J, M] machine of op k of job j
+    durations: np.ndarray      # i[J, M] duration of op k of job j
+    name: str = "jobshop"
+
+    @property
+    def n_jobs(self) -> int:
+        return self.machines.shape[0]
+
+    @property
+    def n_machines(self) -> int:
+        return self.machines.shape[1]
+
+    @property
+    def horizon(self) -> int:
+        return int(self.durations.sum())
+
+
+def generate(n_jobs: int, n_machines: int = 2, seed: int = 0,
+             max_duration: int = 5) -> JobShop:
+    """Seeded Taillard-style instance (every job visits every machine)."""
+    rng = np.random.default_rng(seed)
+    mach = np.stack([rng.permutation(n_machines) for _ in range(n_jobs)])
+    dur = rng.integers(1, max_duration + 1, size=(n_jobs, n_machines))
+    return JobShop(machines=mach, durations=dur,
+                   name=f"jobshop-j{n_jobs}-m{n_machines}-s{seed}")
+
+
+def build_model(inst: JobShop) -> Tuple[Model, dict]:
+    J, M = inst.n_jobs, inst.n_machines
+    h = inst.horizon
+    d = inst.durations
+    m = Model(name=inst.name)
+    s = [[m.int_var(0, h, f"s{j}_{k}") for k in range(M)] for j in range(J)]
+    mk = m.int_var(0, h, "makespan")
+
+    for j in range(J):
+        for k in range(M - 1):
+            m.add(s[j][k] + int(d[j, k]) <= s[j][k + 1])
+        m.add(s[j][M - 1] + int(d[j, M - 1]) <= mk)
+
+    # per-machine disjunctions between operations of different jobs
+    for mach in range(M):
+        ops = [(j, int(np.where(inst.machines[j] == mach)[0][0]))
+               for j in range(J)]
+        for a in range(len(ops)):
+            for b in range(a + 1, len(ops)):
+                (ja, ka), (jb, kb) = ops[a], ops[b]
+                ab = m.reify(s[ja][ka] + int(d[ja, ka]) <= s[jb][kb],
+                             f"m{mach}_{ja}b4{jb}")
+                ba = m.reify(s[jb][kb] + int(d[jb, kb]) <= s[ja][ka],
+                             f"m{mach}_{jb}b4{ja}")
+                m.add(ab + ba >= 1)
+
+    m.minimize(mk)
+    flat = [v for job in s for v in job]
+    m.branch_on(flat + [mk])
+    return m, dict(s=s, mk=mk, check_vars=flat)
+
+
+def check_solution(inst: JobShop, starts: Sequence[int]) -> Tuple[bool, int]:
+    """Ground checker: within-job precedence + machine exclusivity.
+    `starts` is the row-major flattening of s[j][k].
+    Returns (feasible, makespan)."""
+    J, M = inst.n_jobs, inst.n_machines
+    st = np.asarray([int(x) for x in starts]).reshape(J, M)
+    d = inst.durations
+    if (st < 0).any():
+        return False, -1
+    for j in range(J):
+        for k in range(M - 1):
+            if st[j, k] + d[j, k] > st[j, k + 1]:
+                return False, -1
+    for mach in range(M):
+        ivals = []
+        for j in range(J):
+            k = int(np.where(inst.machines[j] == mach)[0][0])
+            ivals.append((int(st[j, k]), int(st[j, k] + d[j, k])))
+        ivals.sort()
+        for (s0, e0), (s1, _) in zip(ivals, ivals[1:]):
+            if s1 < e0:
+                return False, -1
+    return True, int((st + d).max())

@@ -100,7 +100,7 @@ def build_model(inst: RCPSP,
         m.add(s[i] + d[i] <= mk)
     m.minimize(mk)
     m.branch_on(s + [mk])                  # booleans follow by propagation
-    return m, dict(s=s, b=b, mk=mk)
+    return m, dict(s=s, b=b, mk=mk, check_vars=s)
 
 
 def check_solution(inst: RCPSP, starts: Sequence[int]) -> Tuple[bool, int]:

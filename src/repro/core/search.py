@@ -22,12 +22,17 @@ All control flow is mask-based so the step functions vmap; a lane that is
 `done` keeps sweeping its converged store, which is a no-op by
 idempotence (Thm. 2) — correctness never depends on lane divergence.
 
-Superstep structure (the TURBO shape, DESIGN.md §2.3): propagation is
-**hoisted out of the per-lane vmap**.  `lanes_step` runs three phases —
-a vmapped `lane_load` (subproblem dispatch + B&B bound tell), then **one
-lane-batched backend fixpoint over the whole [n_lanes, V] store tensor**
-(`SearchOptions.backend` picks gather / scatter / pallas), then a vmapped
-`lane_commit` (solution recording, backtrack-or-branch bookkeeping).
+Superstep structure (the TURBO shape, DESIGN.md §2.3 and §9): propagation
+is **hoisted out of the per-lane vmap**.  `lanes_step` runs four phases —
+`dispatch_pool` (idle lanes pop the next EPS subproblems off the shared
+per-device pool, DESIGN.md §9), then a vmapped `lane_load` (subproblem
+load + B&B bound tell), then **one lane-batched backend fixpoint over the
+whole [n_lanes, V] store tensor** (`SearchOptions.backend` picks
+gather / scatter / pallas), then a vmapped `lane_commit` (solution
+recording, backtrack-or-branch bookkeeping).  The pool itself comes from
+`eps.decompose` (engine.solve's ``eps_target``); the shared incumbent
+`gbest` each lane prunes against is min-reduced across lanes and mesh
+devices by the engine between supersteps (DESIGN.md §9 bound sharing).
 """
 
 from __future__ import annotations
@@ -123,10 +128,12 @@ def init_lanes(cm: CompiledModel, n_lanes: int, opts: SearchOptions) -> LaneStat
 
 
 def dispatch_pool(st: LaneState, pool_head, n_subs: int):
-    """Shared per-device subproblem queue (the paper's dynamic EPS):
-    fresh lanes pop the next pool indices; when the pool is drained they
-    are marked done.  Replaces static round-robin — no straggler lane can
-    sit on a long private queue while others idle."""
+    """Shared per-device subproblem queue (the paper's dynamic EPS,
+    DESIGN.md §9): fresh lanes pop the next pool indices; when the pool is
+    drained they are marked done.  Replaces static round-robin — no
+    straggler lane can sit on a long private queue while others idle.
+    Runs as phase 0 of every `lanes_step`, so a lane that exhausts its
+    subproblem is replenished on the very next superstep."""
     want = st.fresh & ~st.done & (st.next_sub >= n_subs)
     rank = jnp.cumsum(want.astype(jnp.int32)) - 1
     idx = pool_head + rank
@@ -321,19 +328,25 @@ def lane_commit(cm: CompiledModel, opts: SearchOptions, st: LaneState,
 
 
 def lanes_step(cm: CompiledModel, subs_lb, subs_ub, opts: SearchOptions,
-               st: LaneState, gbest) -> LaneState:
-    """One superstep over all lanes: vmapped load → **one** lane-batched
-    backend fixpoint over the whole [n_lanes, V] store tensor → vmapped
-    commit.  Only the bookkeeping is vmapped; propagation is a single
-    batched call (one kernel invocation per superstep — the TURBO shape).
+               st: LaneState, gbest, pool_head):
+    """One superstep over all lanes: pool dispatch (idle-lane
+    replenishment) → vmapped load → **one** lane-batched backend fixpoint
+    over the whole [n_lanes, V] store tensor → vmapped commit.  Only the
+    bookkeeping is vmapped; propagation is a single batched call (one
+    kernel invocation per superstep — the TURBO shape, DESIGN.md §9).
+
+    `pool_head` is the device-local cursor into the EPS pool; the updated
+    cursor is returned alongside the new lane state.
     """
+    st, pool_head = dispatch_pool(st, pool_head, subs_lb.shape[0])
     pre = jax.vmap(partial(lane_load, cm, subs_lb, subs_ub, opts),
                    in_axes=(0, None))(st, gbest)
     backend = get_backend(opts.backend, **dict(opts.backend_opts))
     lb, ub, sweeps, converged = backend.fixpoint_batch(
         cm, pre.lb, pre.ub, max_iters=opts.max_fixpoint_iters)
-    return jax.vmap(partial(lane_commit, cm, opts))(
+    st = jax.vmap(partial(lane_commit, cm, opts))(
         st, pre, lb, ub, sweeps, converged)
+    return st, pool_head
 
 
 def lanes_best(st: LaneState, dt):

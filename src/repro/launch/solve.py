@@ -29,6 +29,10 @@ def main():
     ap.add_argument("--resources", type=int, default=4)
     ap.add_argument("--lanes", type=int, default=32)
     ap.add_argument("--subs", type=int, default=128)
+    ap.add_argument("--eps-target", type=int, default=None,
+                    help="EPS pool size (DESIGN.md §9): decompose the root "
+                         "into ~this many subproblems; 1 = single-root "
+                         "search; default --subs")
     ap.add_argument("--timeout", type=float, default=120)
     ap.add_argument("--fast", action="store_true",
                     help="optimized profile (capped fixpoint, §Perf P0)")
@@ -110,9 +114,11 @@ def main():
 
     t0 = time.time()
     res = engine.solve(cm, n_lanes=args.lanes, n_subproblems=args.subs,
-                       opts=opts, timeout_s=args.timeout)
+                       eps_target=args.eps_target, opts=opts,
+                       timeout_s=args.timeout)
     print(f"{inst.name}: {res.status} objective={res.objective} "
           f"nodes={res.n_nodes} ({res.nodes_per_sec:.0f}/s) "
+          f"supersteps={res.n_supersteps} "
           f"wall={time.time()-t0:.1f}s complete={res.complete}")
 
 

@@ -1,0 +1,111 @@
+"""Model zoo (DESIGN.md §10): every model solves its seeded small
+instance to proven optimum on every registered backend, with identical
+objectives, ground-checked solutions, and independent oracles where one
+exists (knapsack DP, known n-queens value)."""
+
+import numpy as np
+import pytest
+
+from repro.core import baseline, engine, search as S
+from repro.core import models as zoo
+from repro.core.backend import available_backends
+from repro.core.models import coloring, jobshop, knapsack, nqueens
+
+OPTS = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=256)
+
+
+def _solve(cm, backend="gather", **kw):
+    opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=256,
+                           backend=backend)
+    return engine.solve(cm, n_lanes=8, eps_target=16, opts=opts, **kw)
+
+
+@pytest.mark.parametrize("name", sorted(zoo.ZOO))
+def test_zoo_optimum_identical_across_backends(name):
+    """The acceptance bar: proven optimum on gather/scatter/pallas with
+    identical objective values, and a ground-checked solution."""
+    mod = zoo.ZOO[name]
+    inst = zoo.small_instance(name)
+    m, h = mod.build_model(inst)
+    cm = m.compile()
+    objs = {}
+    for backend in available_backends():
+        res = _solve(cm, backend=backend)
+        assert res.status == engine.OPTIMAL, (name, backend, res.status)
+        vals = [int(res.solution[v.idx]) for v in h["check_vars"]]
+        ok, obj = mod.check_solution(inst, vals)
+        assert ok, (name, backend, vals)
+        assert obj == res.objective, (name, backend, obj, res.objective)
+        objs[backend] = res.objective
+    assert len(set(objs.values())) == 1, (name, objs)
+
+
+@pytest.mark.parametrize("name", sorted(zoo.ZOO))
+def test_zoo_matches_sequential_baseline(name):
+    """Engine and the event-driven sequential solver agree per model."""
+    mod = zoo.ZOO[name]
+    inst = zoo.small_instance(name)
+    m, _ = mod.build_model(inst)
+    cm = m.compile()
+    seq = baseline.SequentialSolver(cm, OPTS).solve(timeout_s=120)
+    par = _solve(cm)
+    assert seq.status == par.status == engine.OPTIMAL
+    assert seq.objective == par.objective
+
+
+def test_knapsack_matches_dp_oracle():
+    for seed in range(3):
+        inst = knapsack.generate(7, seed=seed)
+        m, _ = knapsack.build_model(inst)
+        res = _solve(m.compile())
+        assert res.status == engine.OPTIMAL
+        assert -res.objective == knapsack.dp_optimum(inst)
+
+
+def test_nqueens_known_optimum():
+    """n=5 has a solution with the first queen in column 0: (0,2,4,1,3)."""
+    inst = nqueens.generate(5)
+    ok, obj = nqueens.check_solution(inst, [0, 2, 4, 1, 3])
+    assert ok and obj == 0
+    m, _ = nqueens.build_model(inst)
+    res = _solve(m.compile())
+    assert res.status == engine.OPTIMAL and res.objective == 0
+
+
+def test_nqueens_rejects_clashes():
+    inst = nqueens.generate(4)
+    assert not nqueens.check_solution(inst, [0, 1, 2, 3])[0]   # diagonal
+    assert not nqueens.check_solution(inst, [0, 2, 0, 3])[0]   # column
+
+
+def test_coloring_optimum_is_chromatic_number():
+    """Triangle + pendant vertex: χ = 3, so the optimum cmax is 2."""
+    inst = coloring.Coloring(n=4, edges=[(0, 1), (0, 2), (1, 2), (2, 3)],
+                             name="triangle+1")
+    m, _ = coloring.build_model(inst)
+    res = _solve(m.compile())
+    assert res.status == engine.OPTIMAL and res.objective == 2
+
+
+def test_jobshop_two_jobs_same_order():
+    """Two jobs, both M0→M1, durations [[2,2],[2,2]]: optimum 6 (the
+    second job pipelines one machine behind the first)."""
+    inst = jobshop.JobShop(machines=np.array([[0, 1], [0, 1]]),
+                           durations=np.array([[2, 2], [2, 2]]),
+                           name="js-2x2-pipe")
+    m, h = jobshop.build_model(inst)
+    res = _solve(m.compile())
+    assert res.status == engine.OPTIMAL and res.objective == 6
+    vals = [int(res.solution[v.idx]) for v in h["check_vars"]]
+    ok, mk = jobshop.check_solution(inst, vals)
+    assert ok and mk == 6
+
+
+def test_generators_deterministic():
+    for name in sorted(zoo.ZOO):
+        a, b = zoo.small_instance(name, seed=3), zoo.small_instance(name,
+                                                                    seed=3)
+        ma, _ = zoo.ZOO[name].build_model(a)
+        mb, _ = zoo.ZOO[name].build_model(b)
+        assert ma.lb0 == mb.lb0 and ma.ub0 == mb.ub0
+        assert ma.props == mb.props
