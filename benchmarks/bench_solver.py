@@ -11,11 +11,21 @@ emulation is *throughput scaling with lanes* (bench_propagation.py) and
 *identical objectives* (determinism, Thm 6); wall-clock superiority needs
 the real accelerator.
 
+All solving goes through the session API (`repro.solver`, DESIGN.md
+§11); the `prove` / `fast` presets replace the old hand-rolled
+SearchOptions recipes.
+
 ``--zoo`` adds a per-model section over the whole model zoo (DESIGN.md
 §10: rcpsp, nqueens, coloring, knapsack, jobshop) through the
 EPS-decomposed engine; ``--zoo-smoke --json BENCH_propagation_smoke.json``
 is the `make check` tier — small instances, records merged into the bench
 JSON as its `solver` section.
+
+``--throughput`` is the serving-story benchmark (DESIGN.md §11): one
+`Solver` session over 4 same-shape knapsack instances — cold-vs-warm
+solve (compile amortization) and `solve_many` batched dispatch
+(instances/s) vs sequential warm solves; records land in the `api`
+section of the bench JSON.
 """
 
 from __future__ import annotations
@@ -26,11 +36,11 @@ import os
 import time
 from typing import List
 
-from repro.core import baseline, engine
+from repro import solver
+from repro.core import baseline
 from repro.core import models as zoo
-from repro.core import search as S
 from repro.core.backend import available_backends
-from repro.core.models import rcpsp
+from repro.core.models import knapsack, rcpsp
 
 
 def suite(kind: str, full: bool):
@@ -48,12 +58,15 @@ def suite(kind: str, full: bool):
 def run_suite(name: str, instances: List[rcpsp.RCPSP], timeout_s: float,
               lanes: int, subs: int, rows: List[str],
               backend: str = "gather"):
-    opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=1024,
-                           backend=backend)
-    # §Perf P0/H1: the optimized profile caps sweeps per superstep
-    # (bounded chaotic iteration; identical optima, 1.7–2.5× faster)
-    opts_fast = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=1024,
-                                max_fixpoint_iters=4, backend=backend)
+    cfg = solver.SolveConfig.preset(
+        "prove", n_lanes=lanes, eps_target=subs, timeout_s=timeout_s,
+        backend=backend)
+    # §Perf P0/H1: the `fast` preset caps sweeps per superstep (bounded
+    # chaotic iteration; identical optima, 1.7–2.5× faster)
+    cfg_fast = solver.SolveConfig.preset(
+        "fast", n_lanes=lanes, eps_target=subs, timeout_s=timeout_s,
+        backend=backend)
+    sess = solver.Solver(cfg)
     agg = {}
     for solver_name in ("sequential", "turbo-jax", "turbo-jax-opt"):
         feas = opt = nodes = 0
@@ -63,16 +76,14 @@ def run_suite(name: str, instances: List[rcpsp.RCPSP], timeout_s: float,
             m, _ = rcpsp.build_model(inst)
             cm = m.compile()
             if solver_name == "sequential":
-                res = baseline.SequentialSolver(cm, opts).solve(
-                    timeout_s=timeout_s)
+                res = baseline.SequentialSolver(cm, cfg.search_options()) \
+                    .solve(timeout_s=timeout_s)
             elif solver_name == "turbo-jax":
-                res = engine.solve(cm, n_lanes=lanes, n_subproblems=subs,
-                                   opts=opts, timeout_s=timeout_s)
+                res = sess.solve(cm)
             else:
-                res = engine.solve(cm, n_lanes=lanes, n_subproblems=subs,
-                                   opts=opts_fast, timeout_s=timeout_s)
+                res = sess.solve(cm, config=cfg_fast)
             feas += res.solution is not None
-            opt += res.status == engine.OPTIMAL
+            opt += res.status == solver.OPTIMAL
             nodes += res.n_nodes
             wall += res.wall_s
             objs.append((res.objective, res.status))
@@ -83,9 +94,10 @@ def run_suite(name: str, instances: List[rcpsp.RCPSP], timeout_s: float,
     # optimality (timed-out incumbents legitimately differ)
     def _mism(x, y):
         return sum(1 for (a, sa), (b, sb) in zip(x, y)
-                   if sa == engine.OPTIMAL and sb == engine.OPTIMAL
+                   if sa == solver.OPTIMAL and sb == solver.OPTIMAL
                    and a != b)
-    mism = _mism(agg["sequential"], agg["turbo-jax"]) +         _mism(agg["turbo-jax"], agg["turbo-jax-opt"])
+    mism = _mism(agg["sequential"], agg["turbo-jax"]) + \
+        _mism(agg["turbo-jax"], agg["turbo-jax-opt"])
     rows.append(f"{name},objective-mismatches,{len(instances)},{mism},,,")
     return rows
 
@@ -95,8 +107,10 @@ def run_zoo(timeout_s: float, lanes: int, eps_target: int, rows: List[str],
     """Per-model solver numbers across the whole zoo (DESIGN.md §10):
     nodes/s and time-to-optimum through the EPS-decomposed engine.
     Returns the JSON-able records for the BENCH `solver` section."""
-    opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=512,
-                           backend=backend)
+    cfg = solver.SolveConfig.preset(
+        "prove", n_lanes=lanes, eps_target=eps_target, timeout_s=timeout_s,
+        backend=backend, max_depth=512)
+    sess = solver.Solver(cfg)
     records = []
     for name in sorted(zoo.ZOO):
         mod = zoo.ZOO[name]
@@ -104,36 +118,122 @@ def run_zoo(timeout_s: float, lanes: int, eps_target: int, rows: List[str],
                 else zoo.bench_instance(name, seed=seed))
         m, h = mod.build_model(inst)
         cm = m.compile()
-        res = engine.solve(cm, n_lanes=lanes, eps_target=eps_target,
-                           opts=opts, timeout_s=timeout_s)
+        res = sess.solve(cm)
         # True/False = checked; None = nothing to check (timeout/UNSAT)
         checked = zoo.ground_check(mod, inst, h, res)
         rows.append(f"zoo,{name},{backend},{res.status},{res.objective},"
                     f"{res.nodes_per_sec:.0f},{res.wall_s:.2f},{checked}")
         # time to the *proven* optimum: wall clock until B&B returned
-        # OPTIMAL, jit compile included (the honest CPU-emulation figure —
-        # incumbent timestamps would need engine support)
+        # OPTIMAL, jit compile included (the honest CPU-emulation figure);
+        # the improvements trace now also gives time-to-incumbent
         records.append(dict(
             model=name, instance=inst.name, backend=backend,
             status=res.status, objective=res.objective,
             n_nodes=res.n_nodes, nodes_per_sec=res.nodes_per_sec,
             n_supersteps=res.n_supersteps,
             time_to_proven_optimum_s=(
-                res.wall_s if res.status == engine.OPTIMAL else None),
+                res.wall_s if res.status == solver.OPTIMAL else None),
+            time_to_first_incumbent_s=(
+                res.improvements[0].wall_s if res.improvements else None),
             wall_s=res.wall_s, ground_check=checked))
     return records
 
 
-def write_solver_json(path: str, records) -> None:
-    """Merge the zoo records into `path` as its `solver` section,
-    preserving whatever the propagation smoke already wrote there."""
+def run_throughput(lanes: int, eps_target: int, rows: List[str],
+                   backends=("gather",), n_instances: int = 4,
+                   seed0: int = 0, timeout_s: float = 120.0):
+    """The serving benchmark (DESIGN.md §11): cold vs warm session solve
+    and `solve_many` batched throughput on same-shape knapsack
+    instances, per backend.  Returns records for the BENCH `api`
+    section."""
+    instances = [knapsack.generate(n=6, seed=seed0 + s)
+                 for s in range(n_instances)]
+    cms = []
+    for inst in instances:
+        m, _ = knapsack.build_model(inst)
+        cms.append(m.compile())
+
+    records = []
+    for backend in backends:
+        cfg = solver.SolveConfig.preset(
+            "prove", n_lanes=lanes, eps_target=eps_target,
+            timeout_s=timeout_s, backend=backend)
+        sess = solver.Solver(cfg)
+
+        t0 = time.time()
+        cold_res = sess.solve(cms[0])
+        cold_s = time.time() - t0
+        assert sess.stats["last_solve_cold"], "first solve must compile"
+
+        t0 = time.time()
+        warm_res = sess.solve(cms[0])
+        warm_s = time.time() - t0
+        assert not sess.stats["last_solve_cold"], "second solve recompiled!"
+        assert warm_res.objective == cold_res.objective
+
+        # sequential warm throughput: every instance through the session
+        t0 = time.time()
+        seq = [sess.solve(cm) for cm in cms]
+        seq_s = time.time() - t0
+
+        # batched: ONE device dispatch for all instances (cold for the
+        # batched runner, so also record a warm repeat)
+        t0 = time.time()
+        many = sess.solve_many(cms)
+        many_cold_s = time.time() - t0
+        t0 = time.time()
+        many = sess.solve_many(cms)
+        many_s = time.time() - t0
+
+        parity = all(a.status == b.status and a.objective == b.objective
+                     for a, b in zip(many, seq))
+        stats = sess.session_stats()
+        rec = dict(
+            backend=backend, n_instances=len(cms),
+            model="knapsack-n6",
+            cold_solve_s=round(cold_s, 4), warm_solve_s=round(warm_s, 4),
+            cold_warm_speedup=round(cold_s / max(warm_s, 1e-9), 1),
+            compile_s=round(stats["compile_s"], 4),
+            n_compiles=stats["n_compiles"],
+            runner_builds=stats["runner_builds"],
+            runner_hits=stats["runner_hits"],
+            solve_many_cold_s=round(many_cold_s, 4),
+            solve_many_warm_s=round(many_s, 4),
+            instances_per_sec_batched=round(len(cms) / max(many_s, 1e-9), 1),
+            instances_per_sec_sequential=round(
+                len(cms) / max(seq_s, 1e-9), 1),
+            batched_vs_sequential=round(seq_s / max(many_s, 1e-9), 2),
+            parity_ok=parity,
+            objectives=[r.objective for r in many],
+        )
+        records.append(rec)
+        rows.append(
+            f"api,{backend},cold={cold_s:.2f}s,warm={warm_s:.3f}s,"
+            f"x{rec['cold_warm_speedup']},batched="
+            f"{rec['instances_per_sec_batched']}/s,sequential="
+            f"{rec['instances_per_sec_sequential']}/s,parity={parity}")
+        if not parity:
+            raise SystemExit(
+                f"solve_many parity FAILED on {backend}: "
+                f"{[(r.status, r.objective) for r in many]} vs "
+                f"{[(r.status, r.objective) for r in seq]}")
+    return records
+
+
+def merge_json(path: str, section: str, records) -> None:
+    """Merge `records` into `path` under `section`, preserving whatever
+    the propagation smoke already wrote there."""
     doc = {}
     if os.path.exists(path):
         with open(path) as fh:
             doc = json.load(fh)
-    doc["solver"] = records
+    doc[section] = records
     with open(path, "w") as fh:
         json.dump(doc, fh, indent=2)
+
+
+def write_solver_json(path: str, records) -> None:
+    merge_json(path, "solver", records)
 
 
 def main(argv=None):
@@ -154,18 +254,35 @@ def main(argv=None):
     ap.add_argument("--zoo-smoke", action="store_true",
                     help="ONLY the zoo on small instances (the make-check "
                          "tier); implies --zoo, skips the RCPSP tables")
+    ap.add_argument("--throughput", action="store_true",
+                    help="ONLY the session-API serving benchmark: cold/warm "
+                         "compile amortization + solve_many instances/s on "
+                         "4 knapsack instances, all backends (the make-"
+                         "check api tier)")
     ap.add_argument("--eps-target", type=int, default=64,
                     help="EPS pool size for the zoo runs (DESIGN.md §9)")
     ap.add_argument("--json", default=None,
                     help="merge the zoo records into this JSON file as its "
-                         "`solver` section (e.g. BENCH_propagation_smoke"
-                         ".json)")
+                         "`solver` section (and `--throughput` records as "
+                         "its `api` section), e.g. "
+                         "BENCH_propagation_smoke.json")
     args = ap.parse_args(argv)
-    if args.json and not (args.zoo or args.zoo_smoke):
-        ap.error("--json records the zoo section; pass --zoo or --zoo-smoke")
+    if args.json and not (args.zoo or args.zoo_smoke or args.throughput):
+        ap.error("--json records the zoo/api sections; pass --zoo, "
+                 "--zoo-smoke or --throughput")
     timeout = args.timeout or (300 if args.full else 30)
 
     rows = []
+    if args.throughput:
+        rows.append("api,backend,cold,warm,speedup,batched,sequential,"
+                    "parity")
+        records = run_throughput(lanes=8, eps_target=16, rows=rows,
+                                 backends=available_backends(),
+                                 timeout_s=timeout)
+        print("\n".join(rows))
+        if args.json:
+            merge_json(args.json, "api", records)
+        return rows
     if not args.zoo_smoke:
         rows.append(
             "suite,solver,instances,feasible,optimal,nodes_per_sec,time_s")

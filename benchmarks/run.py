@@ -33,6 +33,11 @@ def main() -> None:
                       if fast else ["--zoo"])
     print(f"# bench_solver,{(time.time()-t0)*1e6:.0f},wall_us")
 
+    print("\n# === session API serving throughput (DESIGN.md §11) ===")
+    t0 = time.time()
+    bench_solver.main(["--throughput"])
+    print(f"# bench_solver_throughput,{(time.time()-t0)*1e6:.0f},wall_us")
+
     print("\n# === planner (pipeline scheduling as RCPSP) ===")
     from repro.distributed import planner
     t0 = time.time()

@@ -1,31 +1,28 @@
-"""Model zoo driver: solve every workload (DESIGN.md §10) through the
-EPS-decomposed engine and ground-check the solutions.
+"""Model zoo driver: solve every workload (DESIGN.md §10) through one
+`Solver` session and ground-check the solutions.
 
   PYTHONPATH=src python examples/model_zoo.py                 # all models
   PYTHONPATH=src python examples/model_zoo.py --model nqueens \
       --backend pallas --eps-target 32
+  PYTHONPATH=src python examples/model_zoo.py --model knapsack --many 4
 """
 
 import argparse
 import time
 
-from repro.core import engine
+from repro import solver
 from repro.core import models as zoo
-from repro.core import search as S
 from repro.core.backend import available_backends
 
 
-def solve_one(name, args):
+def solve_one(sess, name, args):
     mod = zoo.ZOO[name]
     inst = (zoo.bench_instance(name, seed=args.seed) if args.bench
             else zoo.small_instance(name, seed=args.seed))
     m, h = mod.build_model(inst)
     cm = m.compile()
-    opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=512,
-                           backend=args.backend)
     t0 = time.time()
-    res = engine.solve(cm, n_lanes=args.lanes, eps_target=args.eps_target,
-                       opts=opts, timeout_s=args.timeout)
+    res = sess.solve(cm)
     line = (f"{inst.name:24s} {res.status:8s} obj={res.objective} "
             f"nodes={res.n_nodes:6d} ({res.nodes_per_sec:7.0f}/s) "
             f"supersteps={res.n_supersteps:5d} {time.time() - t0:5.1f}s")
@@ -33,6 +30,26 @@ def solve_one(name, args):
     if checked is not None:
         line += f" | ground-check {'OK' if checked else 'FAIL'}"
     print(line)
+
+
+def solve_many_demo(sess, name, count, args):
+    """The throughput path: `count` same-shape instances of one model in
+    a single batched device dispatch (DESIGN.md §11)."""
+    mod = zoo.ZOO[name]
+    insts = [(zoo.bench_instance(name, seed=args.seed + k) if args.bench
+              else zoo.small_instance(name, seed=args.seed + k))
+             for k in range(count)]
+    built = [mod.build_model(i) for i in insts]
+    cms = [m.compile() for m, _ in built]
+    t0 = time.time()
+    results = sess.solve_many(cms)
+    wall = time.time() - t0
+    for inst, (m, h), res in zip(insts, built, results):
+        checked = zoo.ground_check(mod, inst, h, res)
+        print(f"{inst.name:24s} {res.status:8s} obj={res.objective} "
+              f"| ground-check {'OK' if checked else checked}")
+    print(f"solve_many: {count} instances in {wall:.1f}s "
+          f"({count / max(wall, 1e-9):.1f} instances/s, one dispatch)")
 
 
 def main():
@@ -48,11 +65,22 @@ def main():
     ap.add_argument("--timeout", type=float, default=60)
     ap.add_argument("--bench", action="store_true",
                     help="larger benchmark-tier instances")
+    ap.add_argument("--many", type=int, default=None, metavar="N",
+                    help="solve N same-shape instances of --model in one "
+                         "batched dispatch (solve_many; needs --model)")
     args = ap.parse_args()
 
+    sess = solver.Solver(solver.SolveConfig.preset(
+        "prove", n_lanes=args.lanes, eps_target=args.eps_target,
+        timeout_s=args.timeout, backend=args.backend, max_depth=512))
+    if args.many:
+        if args.model == "all":
+            ap.error("--many needs a specific --model (same-shape batch)")
+        solve_many_demo(sess, args.model, args.many, args)
+        return
     names = sorted(zoo.ZOO) if args.model == "all" else [args.model]
     for name in names:
-        solve_one(name, args)
+        solve_one(sess, name, args)
 
 
 if __name__ == "__main__":

@@ -6,9 +6,8 @@ determinism guarantee.
 
 import jax.numpy as jnp
 
+from repro import solver
 from repro.core.model import Model
-from repro.core import engine
-from repro.core import search as S
 from repro.core.backend import available_backends, get_backend
 from repro.core.fixpoint import fixpoint, sequential_fixpoint
 
@@ -51,17 +50,28 @@ def main():
     print(f"backends {available_backends()} agree on the batched "
           f"fixpoint: {agree}")
 
-    # -- solve (EPS lanes + branch & bound, DESIGN.md §9: eps_target
+    # -- solve through the session API (DESIGN.md §11): a SolveConfig
+    #    consolidates lanes / EPS / backend / strategy (eps_target=32
     #    decomposes the root into ~32 subproblems that seed and replenish
-    #    the 8 lanes; opts.backend swaps the propagation implementation,
-    #    e.g. backend="pallas" for the VMEM kernel) ------------------------
-    res = engine.solve(cm, n_lanes=8, eps_target=32,
-                       opts=S.SearchOptions(backend="gather"))
+    #    the 8 lanes, DESIGN.md §9; backend="pallas" would swap in the
+    #    VMEM kernel), and the Solver session caches the compiled runner
+    #    so a second same-shape solve skips jit entirely ------------------
+    sess = solver.Solver(solver.SolveConfig(n_lanes=8, eps_target=32,
+                                            backend="gather"))
+    res = sess.solve(cm)
     print(f"status={res.status} makespan={res.objective} "
           f"nodes={res.n_nodes} ({res.nodes_per_sec:.0f} nodes/s)")
     starts = [int(res.solution[v.idx]) for v in s]
     print("starts:", starts)
     assert res.objective == sum(d)       # one machine => serial schedule
+
+    # -- warm path: same shapes, no recompilation -------------------------
+    res2 = sess.solve(cm)
+    stats = sess.session_stats()
+    print(f"warm solve: {res2.wall_s*1e3:.0f}ms (cold {res.wall_s:.1f}s), "
+          f"{stats['n_compiles']} compile for {stats['solves']} solves")
+    assert res2.objective == res.objective
+    assert stats["n_compiles"] == 1
 
 
 if __name__ == "__main__":

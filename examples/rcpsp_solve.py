@@ -1,29 +1,27 @@
 """End-to-end driver for the paper's experiment: solve an RCPSP suite
-with the TURBO-style batched engine, cross-check against the sequential
-baseline, and ground-verify every solution (paper Table 1 workflow).
+with the TURBO-style batched engine (one `Solver` session — compilation
+is paid once and amortized over the whole suite), cross-check against
+the sequential baseline, and ground-verify every solution (paper Table 1
+workflow).
 
   PYTHONPATH=src python examples/rcpsp_solve.py [--n 10] [--count 5]
   PYTHONPATH=src python examples/rcpsp_solve.py --file path/to/file.rcp
 """
 
 import argparse
-import time
 
-from repro.core import baseline, engine
-from repro.core import search as S
+from repro import solver
+from repro.core import baseline
 from repro.core.backend import available_backends
 from repro.core.models import rcpsp
 
 
-def solve_one(inst, lanes, subs, timeout, backend="gather"):
+def solve_one(sess, inst, timeout):
     m, h = rcpsp.build_model(inst)
     cm = m.compile()
-    opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=1024,
-                           backend=backend)
-    t0 = time.time()
-    par = engine.solve(cm, n_lanes=lanes, n_subproblems=subs, opts=opts,
-                       timeout_s=timeout)
-    seq = baseline.SequentialSolver(cm, opts).solve(timeout_s=timeout)
+    par = sess.solve(cm)
+    seq = baseline.SequentialSolver(cm, sess.config.search_options()) \
+        .solve(timeout_s=timeout)
     line = (f"{inst.name:24s} turbo-jax: {par.status:8s} mk={par.objective} "
             f"nodes={par.n_nodes:6d} {par.wall_s:6.1f}s | "
             f"seq: {seq.status:8s} mk={seq.objective} "
@@ -53,15 +51,22 @@ def main():
                     help="propagation backend (core/backend.py)")
     args = ap.parse_args()
 
+    sess = solver.Solver(solver.SolveConfig.preset(
+        "prove", n_lanes=args.lanes, eps_target=args.subs,
+        timeout_s=args.timeout, backend=args.backend))
     if args.file:
         inst = (rcpsp.parse_psplib_sm(args.file)
                 if args.file.endswith(".sm")
                 else rcpsp.parse_patterson(args.file))
-        solve_one(inst, args.lanes, args.subs, args.timeout, args.backend)
+        solve_one(sess, inst, args.timeout)
         return
     for seed in range(args.count):
         inst = rcpsp.generate(args.n, n_resources=args.resources, seed=seed)
-        solve_one(inst, args.lanes, args.subs, args.timeout, args.backend)
+        solve_one(sess, inst, args.timeout)
+    stats = sess.session_stats()
+    print(f"session: {stats['solves']} solves, {stats['n_compiles']} "
+          f"compiles ({stats['compile_s']:.1f}s), "
+          f"{stats['runner_hits']} cache hits")
 
 
 if __name__ == "__main__":

@@ -6,9 +6,11 @@
 # Runs the ROADMAP tier-1 command (full pytest; collection must be clean),
 # a 2-size bench_propagation smoke comparing all registered propagation
 # backends, a model-zoo solver smoke (all five models through the EPS
-# engine, DESIGN.md §10) and the docs check, writing
-# BENCH_propagation_smoke.json (propagation rows + `solver` section) at
-# the repo root so the perf trajectory populates per PR.
+# engine, DESIGN.md §10), a session-API smoke (cold+warm compile
+# amortization + solve_many batched throughput on 4 knapsack instances,
+# DESIGN.md §11) and the docs check, writing BENCH_propagation_smoke.json
+# (propagation rows + `solver` + `api` sections) at the repo root so the
+# perf trajectory populates per PR.
 #
 # Exit code: nonzero on collection errors or bench failure.  Known-failing
 # tier-1 tests (the seed ships with failing NN-substrate tests; see
@@ -48,6 +50,11 @@ echo
 echo "== model-zoo solver smoke (5 models, EPS engine) =="
 python -m benchmarks.bench_solver \
     --zoo-smoke --json BENCH_propagation_smoke.json || exit 1
+
+echo
+echo "== session-API smoke (cold+warm solve, solve_many x4, all backends) =="
+python -m benchmarks.bench_solver \
+    --throughput --json BENCH_propagation_smoke.json || exit 1
 
 echo
 echo "== docs check (README/DESIGN references + quickstart dry-run) =="

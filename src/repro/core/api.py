@@ -1,0 +1,736 @@
+"""Session-oriented public solver API (DESIGN.md §11) — ``repro.solver``.
+
+The paper's TURBO solves one instance per launch; the ROADMAP north-star
+is a serving system, which needs three things a blocking ten-kwarg
+``engine.solve`` cannot give:
+
+* **amortized compilation** — `Solver` is a session owning a
+  compiled-runner cache keyed by ``(model shape signature, config)``, so
+  repeated ``solver.solve(cm)`` calls on same-shape instances skip
+  jit/lowering entirely (the warm path);
+* **batched dispatch** — ``solver.solve_many([cm...])`` stacks N
+  same-shape instances into ONE device dispatch (instances are a vmapped
+  leading axis over the whole chunk runner: per-instance lane blocks,
+  per-instance EPS pools, per-instance B&B bounds), the throughput
+  scenario (instances/s);
+* **anytime answers** — ``solver.solve_iter(cm)`` is a generator
+  yielding `Progress` events after every host chunk (superstep, best
+  bound, incumbent, node counters), so a timeout degrades to the best
+  incumbent instead of nothing; `SolveResult.improvements` records the
+  bound trace.
+
+Configuration is one frozen `SolveConfig` dataclass with named presets
+(``prove`` — the default full B&B proof profile, ``first_solution`` —
+stop at the first solution, ``fast`` — capped fixpoint sweeps, §Perf
+P0/H1), replacing the flag recipes previously duplicated across
+`launch/solve.py`, `benchmarks/bench_solver.py` and the tests.
+
+`engine.solve` remains as a thin deprecation shim over this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import (Any, Dict, Iterator, List, NamedTuple, Optional,
+                    Sequence, Tuple)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.compile import CompiledModel
+from repro.core import eps
+from repro.core import search as S
+
+# terminal statuses (re-exported by repro.core.engine for back-compat)
+OPTIMAL = "OPTIMAL"
+SAT = "SAT"
+UNSAT = "UNSAT"
+UNKNOWN = "UNKNOWN"
+
+
+class Improvement(NamedTuple):
+    """One incumbent improvement in a solve's anytime trace."""
+    superstep: int
+    wall_s: float
+    objective: int
+
+
+@dataclasses.dataclass
+class SolveResult:
+    status: str
+    objective: Optional[int]
+    solution: Optional[np.ndarray]
+    n_nodes: int
+    n_fails: int
+    n_sols: int
+    n_sweeps: int
+    n_supersteps: int
+    wall_s: float
+    complete: bool
+    # anytime trace: every (superstep, wall_s, objective) at which the
+    # global incumbent improved, chunk-granular (DESIGN.md §11).
+    improvements: Tuple[Improvement, ...] = ()
+
+    @property
+    def nodes_per_sec(self) -> float:
+        return self.n_nodes / max(self.wall_s, 1e-9)
+
+
+@dataclasses.dataclass
+class Progress:
+    """One anytime event from `Solver.solve_iter`, emitted per host chunk.
+
+    The last event has ``final=True`` and carries the terminal
+    `SolveResult` in ``result``; earlier events report the running
+    incumbent (``best_objective`` is None for satisfaction models or
+    while no solution exists yet).
+    """
+    superstep: int
+    best_objective: Optional[int]
+    has_solution: bool
+    incumbent: Optional[np.ndarray]
+    n_nodes: int
+    n_sols: int
+    wall_s: float
+    final: bool = False
+    result: Optional[SolveResult] = None
+
+
+# --------------------------------------------------------------------------
+# SolveConfig: one frozen config object + named presets
+# --------------------------------------------------------------------------
+
+_VAR_STRATEGIES = (S.INPUT_ORDER, S.MIN_DOM, S.MIN_LB)
+_VAL_STRATEGIES = (S.VAL_MIN, S.VAL_SPLIT)
+
+# named flag recipes (DESIGN.md §11). `prove` is the proof profile used
+# by every benchmark table; `fast` is the §Perf P0/H1 capped-sweep
+# profile (identical optima, bounded chaotic iteration); `first_solution`
+# is the satisfaction/anytime profile.
+PRESETS: Dict[str, Dict[str, Any]] = {
+    "prove": dict(var_strategy=S.MIN_LB, max_depth=1024),
+    "first_solution": dict(var_strategy=S.MIN_LB, max_depth=1024,
+                           stop_on_first=True),
+    "fast": dict(var_strategy=S.MIN_LB, max_depth=1024,
+                 max_fixpoint_iters=4),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveConfig:
+    """Everything `Solver` needs besides the model itself.
+
+    Consolidates the former ``engine.solve`` kwarg sprawl; validated on
+    construction, hashable (it is half of the session cache key), and
+    buildable from a named preset: ``SolveConfig.preset("fast",
+    backend="pallas", n_lanes=128)``.
+    """
+
+    # lanes / EPS decomposition (DESIGN.md §9)
+    n_lanes: int = 64
+    eps_target: Optional[int] = None          # None → 4 * n_lanes
+    # host chunking / budgets
+    chunk: int = 256
+    timeout_s: Optional[float] = None
+    max_supersteps: Optional[int] = None
+    # propagation backend (core/backend.py)
+    backend: str = "gather"
+    backend_opts: Tuple[Tuple[str, Any], ...] = ()
+    # search strategy (core/search.py)
+    var_strategy: str = S.INPUT_ORDER
+    val_strategy: str = S.VAL_MIN
+    max_depth: int = 2048
+    max_fixpoint_iters: Optional[int] = None
+    stop_on_first: bool = False
+    # multi-device engine
+    mesh: Optional[jax.sharding.Mesh] = None
+    lane_axes: Tuple[str, ...] = ()
+    # pad EPS pools to the next power of two with explicitly-failed
+    # stores so the compiled runner re-lowers per size *bucket*, not per
+    # exact pool size (DESIGN.md §11 cache-key discussion)
+    pad_pool: bool = True
+    # provenance tag only — excluded from equality/hash so a preset and
+    # its hand-rolled equivalent share one cache entry
+    preset_name: Optional[str] = dataclasses.field(default=None,
+                                                   compare=False)
+
+    def __post_init__(self):
+        def bad(msg):
+            raise ValueError(f"SolveConfig: {msg}")
+
+        if isinstance(self.backend_opts, dict):
+            object.__setattr__(self, "backend_opts",
+                               tuple(sorted(self.backend_opts.items())))
+        else:
+            object.__setattr__(self, "backend_opts",
+                               tuple(tuple(kv) for kv in self.backend_opts))
+        object.__setattr__(self, "lane_axes", tuple(self.lane_axes))
+
+        for name in ("n_lanes", "chunk", "max_depth"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < 1:
+                bad(f"{name} must be a positive int, got {v!r}")
+        for name in ("eps_target", "max_supersteps", "max_fixpoint_iters"):
+            v = getattr(self, name)
+            if v is not None and (not isinstance(v, int) or v < 1):
+                bad(f"{name} must be None or a positive int, got {v!r}")
+        if self.timeout_s is not None and not self.timeout_s > 0:
+            bad(f"timeout_s must be None or > 0, got {self.timeout_s!r}")
+
+        from repro.core.backend import available_backends
+        if self.backend not in available_backends():
+            bad(f"unknown backend {self.backend!r}; "
+                f"available: {', '.join(available_backends())}")
+        for kv in self.backend_opts:
+            if len(kv) != 2 or not isinstance(kv[0], str):
+                bad(f"backend_opts must be (name, value) pairs, got "
+                    f"{self.backend_opts!r}")
+        if self.var_strategy not in _VAR_STRATEGIES:
+            bad(f"var_strategy {self.var_strategy!r} not in "
+                f"{_VAR_STRATEGIES}")
+        if self.val_strategy not in _VAL_STRATEGIES:
+            bad(f"val_strategy {self.val_strategy!r} not in "
+                f"{_VAL_STRATEGIES}")
+        if self.lane_axes and self.mesh is None:
+            bad("lane_axes given without a mesh")
+        if self.mesh is not None:
+            if not self.lane_axes:
+                bad("mesh given without lane_axes (which mesh axes shard "
+                    "the lanes?)")
+            missing = [a for a in self.lane_axes
+                       if a not in self.mesh.axis_names]
+            if missing:
+                bad(f"lane_axes {missing} not in mesh axes "
+                    f"{tuple(self.mesh.axis_names)}")
+
+    @classmethod
+    def preset(cls, name: str, **overrides) -> "SolveConfig":
+        """Build a named preset (``prove`` | ``first_solution`` |
+        ``fast``), optionally overriding any field."""
+        try:
+            base = PRESETS[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown preset {name!r}; available: "
+                f"{', '.join(sorted(PRESETS))}") from None
+        kw = dict(base)
+        kw.update(overrides)
+        kw.setdefault("preset_name", name)
+        return cls(**kw)
+
+    def replace(self, **overrides) -> "SolveConfig":
+        if "preset_name" not in overrides:
+            overrides["preset_name"] = None if overrides else self.preset_name
+        return dataclasses.replace(self, **overrides)
+
+    def search_options(self) -> S.SearchOptions:
+        return S.SearchOptions(
+            var_strategy=self.var_strategy, val_strategy=self.val_strategy,
+            max_depth=self.max_depth,
+            max_fixpoint_iters=self.max_fixpoint_iters,
+            stop_on_first=self.stop_on_first, backend=self.backend,
+            backend_opts=self.backend_opts)
+
+    def resolved_eps_target(self) -> int:
+        return (self.eps_target if self.eps_target is not None
+                else 4 * self.n_lanes)
+
+    def compile_key(self) -> tuple:
+        """The config half of the session cache key: exactly the fields
+        that shape the traced/compiled chunk runner.  Budget fields
+        (timeout_s, max_supersteps) and eps_target are host-side only —
+        two configs differing only there share one compiled runner."""
+        return (self.n_lanes, self.chunk, self.backend, self.backend_opts,
+                self.var_strategy, self.val_strategy, self.max_depth,
+                self.max_fixpoint_iters, self.stop_on_first, self.mesh,
+                self.lane_axes)
+
+
+def shape_signature(cm: CompiledModel) -> tuple:
+    """The model half of the session cache key: every static field and
+    array shape of the compiled tables that participates in tracing
+    (incl. the branch-var count).  Two instances with equal signatures
+    (e.g. zoo generator outputs across seeds) reuse one compiled
+    runner; the table *contents* are runtime arguments."""
+    return (cm.n_vars, cm.n_props, cm.k_terms, cm.d_occ,
+            int(cm.branch_vars.shape[0]), cm.obj_var, cm.dtype)
+
+
+def _canonical(cm: CompiledModel) -> CompiledModel:
+    """Blank the (static) model name so same-shape instances share one
+    jit trace — the name is display metadata, never computed on."""
+    return cm if cm.name == "" else dataclasses.replace(cm, name="")
+
+
+def _bucket(n: int) -> int:
+    """Next power of two ≥ n — the pool-size padding bucket."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+# --------------------------------------------------------------------------
+# The jitted chunk runner (moved here from engine.py; engine re-exports)
+# --------------------------------------------------------------------------
+
+def _chunk_body(opts: S.SearchOptions, stop_on_first: bool, axis_names,
+                cm: CompiledModel, subs_lb, subs_ub, carry):
+    st, gbest, gdone, it, pool_head = carry
+    st, new_head = S.lanes_step(cm, subs_lb, subs_ub, opts, st, gbest,
+                                pool_head[0])
+    pool_head = new_head[None].astype(jnp.int32)
+    best = jnp.min(st.best_obj)
+    done = jnp.all(st.done)
+    any_sol = jnp.any(st.has_sol)
+    if axis_names:
+        best = lax.pmin(best, axis_names)
+        done = lax.pmin(done.astype(jnp.int32), axis_names) == 1
+        any_sol = lax.pmax(any_sol.astype(jnp.int32), axis_names) == 1
+    gbest = jnp.minimum(gbest, best)
+    # guard the counter on the *incoming* done flag: inside the plain
+    # while_loop the body never runs once done (no-op guard), but under
+    # solve_many's instance-vmap finished instances keep executing the
+    # batched body — their superstep count must freeze
+    it = it + jnp.where(gdone, 0, 1).astype(jnp.int32)
+    gdone = gdone | done
+    if stop_on_first:
+        gdone = gdone | any_sol
+    return st, gbest, gdone, it, pool_head
+
+
+def _run_chunk(opts: S.SearchOptions, stop_on_first: bool, chunk: int,
+               axis_names, cm: CompiledModel, subs_lb, subs_ub, carry):
+    """`chunk` supersteps (or until done) — the unit of jit compilation
+    and of host control (timeouts, anytime progress events)."""
+    it0 = carry[3]
+
+    def body(c):
+        return _chunk_body(opts, stop_on_first, axis_names, cm,
+                           subs_lb, subs_ub, c)
+
+    def cond(c):
+        return (~c[2]) & (c[3] - it0 < chunk)
+
+    return lax.while_loop(cond, body, carry)
+
+
+def _init_carry(cm: CompiledModel, n_lanes: int, opts: S.SearchOptions,
+                n_heads: int = 1):
+    dt = cm.jdtype
+    big = jnp.asarray(jnp.iinfo(dt).max // 4, dt)
+    state0 = S.init_lanes(cm, n_lanes, opts)
+    return (state0, big, jnp.asarray(False), jnp.asarray(0, jnp.int32),
+            jnp.zeros((n_heads,), jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Status derivation — the ONE place a terminal SolveResult is assembled
+# (fixes the dead/duplicated logic that lived in engine.solve)
+# --------------------------------------------------------------------------
+
+def derive_result(cm: CompiledModel, best_obj, has_sol, best_sol,
+                  incomplete, done: bool, n_nodes: int, n_fails: int,
+                  n_sols: int, n_sweeps: int, n_supersteps: int,
+                  wall_s: float,
+                  improvements: Tuple[Improvement, ...] = ()
+                  ) -> SolveResult:
+    """Derive (status, objective, solution) from terminal lane state.
+
+    ``done`` must mean *search exhausted* — every lane drained the pool
+    (``st.done.all()``) — NOT merely "the solve loop stopped": a
+    ``stop_on_first`` early-out or a budget/timeout is not an
+    exhaustiveness proof and must never yield OPTIMAL/UNSAT.
+
+    * optimization (``cm.obj_var >= 0``): the incumbent lane is
+      ``best_obj.argmin()``; OPTIMAL iff the search completed, else SAT;
+    * satisfaction: the incumbent lane is ``has_sol.argmax()`` — NOT the
+      objective argmin, whose all-big tie would always pick lane 0 and
+      read a zeroed ``best_sol`` row — and the status is SAT;
+    * no solution anywhere: UNSAT iff complete, else UNKNOWN.
+    """
+    best_obj = np.asarray(best_obj).reshape(-1)
+    has_sol = np.asarray(has_sol).reshape(-1)
+    best_sol = np.asarray(best_sol).reshape(-1, cm.n_vars)
+    complete = bool(done) and not bool(np.asarray(incomplete).any())
+
+    if has_sol.any():
+        if cm.obj_var >= 0:
+            i = int(best_obj.argmin())
+            obj = int(best_obj[i])
+            status = OPTIMAL if complete else SAT
+        else:
+            i = int(has_sol.argmax())
+            obj = None
+            status = SAT
+        sol = best_sol[i]
+    else:
+        sol, obj = None, None
+        status = UNSAT if complete else UNKNOWN
+
+    return SolveResult(status=status, objective=obj, solution=sol,
+                       n_nodes=int(n_nodes), n_fails=int(n_fails),
+                       n_sols=int(n_sols), n_sweeps=int(n_sweeps),
+                       n_supersteps=int(n_supersteps), wall_s=wall_s,
+                       complete=complete,
+                       improvements=tuple(improvements))
+
+
+# --------------------------------------------------------------------------
+# Compiled-runner cache
+# --------------------------------------------------------------------------
+
+def _aval_key(args) -> tuple:
+    leaves, treedef = jax.tree.flatten(args)
+    from jax.api_util import shaped_abstractify
+    return (treedef, tuple(shaped_abstractify(x) for x in leaves))
+
+
+class CompiledRunner:
+    """One cache slot: a jitted chunk runner plus its AOT-compiled
+    executables keyed by argument avals (pool-size buckets land here).
+
+    Compilation is explicit (`fn.lower(...).compile()`) so the session
+    can *count* compiles and *time* them — `n_compiles` staying flat
+    across a second solve is the warm-path proof the tests assert on.
+    """
+
+    def __init__(self, fn, aot: bool = True):
+        self.fn = fn
+        self.aot = aot
+        self._execs: Dict[tuple, Any] = {}
+        self.n_compiles = 0
+        self.n_calls = 0
+        self.compile_s = 0.0
+
+    def __call__(self, *args):
+        self.n_calls += 1
+        if not self.aot:   # mesh path: plain jit (AOT + shard_map varies
+            return self.fn(*args)   # across jax versions; counters track
+                                    # builds only)
+        key = _aval_key(args)
+        exe = self._execs.get(key)
+        if exe is None:
+            t0 = time.time()
+            exe = self.fn.lower(*args).compile()
+            self.compile_s += time.time() - t0
+            self.n_compiles += 1
+            self._execs[key] = exe
+        return exe(*args)
+
+
+class Solver:
+    """A solving session: one `SolveConfig` (overridable per call) plus a
+    compiled-runner cache keyed by ``(shape_signature(cm),
+    config.compile_key(), batched?)``.
+
+    Construct once, solve many::
+
+        solver = Solver(SolveConfig.preset("prove", backend="pallas"))
+        res = solver.solve(cm)              # cold: lower + compile
+        res2 = solver.solve(cm2)            # warm: same shapes, no compile
+        many = solver.solve_many(cms)       # one batched device dispatch
+        for ev in solver.solve_iter(cm):    # anytime incumbent stream
+            ...
+    """
+
+    def __init__(self, config: Optional[SolveConfig] = None, **overrides):
+        base = config if config is not None else SolveConfig.preset("prove")
+        self.config = base.replace(**overrides) if overrides else base
+        self._runners: Dict[tuple, CompiledRunner] = {}
+        self.stats: Dict[str, Any] = {
+            "solves": 0, "runner_builds": 0, "runner_hits": 0,
+            "last_solve_cold": None,
+        }
+
+    # -- cache ------------------------------------------------------------
+
+    def _config_for(self, config: Optional[SolveConfig],
+                    overrides: dict) -> SolveConfig:
+        cfg = config if config is not None else self.config
+        return cfg.replace(**overrides) if overrides else cfg
+
+    def _runner_for(self, cm: CompiledModel, cfg: SolveConfig,
+                    batched: bool) -> CompiledRunner:
+        key = (shape_signature(cm), cfg.compile_key(), batched)
+        runner = self._runners.get(key)
+        if runner is not None:
+            self.stats["runner_hits"] += 1
+            return runner
+        opts = cfg.search_options()
+        if cfg.mesh is not None:
+            axes = cfg.lane_axes
+            dev_fn = partial(_run_chunk, opts, cfg.stop_on_first, cfg.chunk,
+                             axes)
+            spec = P(axes)
+            state0 = S.init_lanes(cm, cfg.n_lanes * self._n_dev(cfg), opts)
+            state_spec = jax.tree.map(lambda _: spec, state0)
+            carry_spec = (state_spec, P(), P(), P(), spec)
+            cm_spec = jax.tree.map(lambda _: P(), cm)
+            fn = jax.jit(jax.shard_map(
+                dev_fn, mesh=cfg.mesh,
+                in_specs=(cm_spec, spec, spec, carry_spec),
+                out_specs=carry_spec, check_vma=False))
+            runner = CompiledRunner(fn, aot=False)
+        else:
+            fn = partial(_run_chunk, opts, cfg.stop_on_first, cfg.chunk, ())
+            if batched:
+                fn = jax.vmap(fn)
+            runner = CompiledRunner(jax.jit(fn), aot=True)
+        self._runners[key] = runner
+        self.stats["runner_builds"] += 1
+        return runner
+
+    @staticmethod
+    def _n_dev(cfg: SolveConfig) -> int:
+        return int(np.prod([cfg.mesh.shape[a] for a in cfg.lane_axes]))
+
+    def session_stats(self) -> Dict[str, Any]:
+        """Aggregate cache/compile counters across all cached runners."""
+        out = dict(self.stats)
+        out["n_runners"] = len(self._runners)
+        out["n_compiles"] = sum(r.n_compiles for r in self._runners.values())
+        out["compile_s"] = sum(r.compile_s for r in self._runners.values())
+        return out
+
+    def clear_cache(self) -> None:
+        """Drop every cached runner and compiled executable.  The cache
+        is otherwise unbounded (one executable per shape-signature ×
+        compile-key × pool-bucket) — long-lived serving processes that
+        churn through many distinct model shapes should evict
+        periodically; counters are kept."""
+        self._runners.clear()
+
+    # -- pool preparation -------------------------------------------------
+
+    def _pool_for(self, cm: CompiledModel, cfg: SolveConfig,
+                  subs: Optional[tuple], opts: S.SearchOptions):
+        if subs is None:
+            subs_lb, subs_ub = eps.decompose(cm, cfg.resolved_eps_target(),
+                                             opts)
+        else:
+            subs_lb, subs_ub = subs
+        subs_lb, subs_ub = np.asarray(subs_lb), np.asarray(subs_ub)
+        size = subs_lb.shape[0]
+        if cfg.pad_pool:
+            size = _bucket(size)
+        if cfg.mesh is not None:
+            n_dev = self._n_dev(cfg)
+            size = size + (-size) % n_dev
+        subs_lb, subs_ub = eps.pad_pool(subs_lb, subs_ub, size)
+        return jnp.asarray(subs_lb), jnp.asarray(subs_ub)
+
+    # -- solve / solve_iter ----------------------------------------------
+
+    def solve(self, cm: CompiledModel, *, subs: Optional[tuple] = None,
+              config: Optional[SolveConfig] = None,
+              **overrides) -> SolveResult:
+        """Blocking solve; equals the last `solve_iter` event's result."""
+        res = None
+        for ev in self.solve_iter(cm, subs=subs, config=config, **overrides):
+            if ev.final:
+                res = ev.result
+        return res
+
+    def solve_iter(self, cm: CompiledModel, *,
+                   subs: Optional[tuple] = None,
+                   config: Optional[SolveConfig] = None,
+                   **overrides) -> Iterator[Progress]:
+        """Anytime solve: yields a `Progress` event after every host
+        chunk; the final event (``final=True``) carries the
+        `SolveResult` (with its `improvements` trace)."""
+        cfg = self._config_for(config, overrides)
+        opts = cfg.search_options()
+        t0 = time.time()
+        self.stats["solves"] += 1
+        cm = _canonical(cm)
+        subs_lb, subs_ub = self._pool_for(cm, cfg, subs, opts)
+
+        builds0 = self.stats["runner_builds"]
+        runner = self._runner_for(cm, cfg, batched=False)
+        if cfg.mesh is not None:
+            n_dev = self._n_dev(cfg)
+            carry = _init_carry(cm, cfg.n_lanes * n_dev, opts,
+                                n_heads=n_dev)
+        else:
+            carry = _init_carry(cm, cfg.n_lanes, opts)
+        compiles0 = runner.n_compiles
+        self.stats["last_solve_cold"] = None  # set after first chunk
+
+        improvements: List[Improvement] = []
+        dt = cm.jdtype
+        big = int(np.iinfo(dt).max // 4)
+        best_seen = big
+        while True:
+            carry = jax.block_until_ready(runner(cm, subs_lb, subs_ub,
+                                                 carry))
+            if self.stats["last_solve_cold"] is None:
+                self.stats["last_solve_cold"] = (
+                    runner.n_compiles > compiles0
+                    or self.stats["runner_builds"] > builds0)
+            st, gbest, gdone, it, _ = carry
+            wall = time.time() - t0
+            superstep = int(np.asarray(it).max())
+            n_nodes = int(np.asarray(st.n_nodes).sum())
+            n_sols = int(np.asarray(st.n_sols).sum())
+            has = bool(np.asarray(st.has_sol).any())
+            obj = None
+            incumbent = None
+            if cm.obj_var >= 0 and has:
+                flat = np.asarray(st.best_obj).reshape(-1)
+                i = int(flat.argmin())
+                obj = int(flat[i])
+                if obj < best_seen:
+                    best_seen = obj
+                    improvements.append(Improvement(superstep, wall, obj))
+                    incumbent = np.asarray(st.best_sol).reshape(
+                        -1, cm.n_vars)[i]
+            stop = bool(np.asarray(gdone).all())
+            if cfg.timeout_s is not None and wall > cfg.timeout_s:
+                stop = True
+            if (cfg.max_supersteps is not None
+                    and superstep >= cfg.max_supersteps):
+                stop = True
+            if not stop:
+                yield Progress(superstep=superstep, best_objective=obj,
+                               has_solution=has, incumbent=incumbent,
+                               n_nodes=n_nodes, n_sols=n_sols, wall_s=wall)
+                continue
+            totals = S.lane_totals(st)
+            # exhaustion, not gdone: a stop_on_first early-out sets gdone
+            # without draining the pool and must not claim OPTIMAL/UNSAT
+            exhausted = bool(np.asarray(st.done).all())
+            res = derive_result(
+                cm, st.best_obj, st.has_sol, st.best_sol, st.incomplete,
+                exhausted, totals["n_nodes"],
+                totals["n_fails"], totals["n_sols"], totals["n_sweeps"],
+                superstep, time.time() - t0, tuple(improvements))
+            yield Progress(superstep=superstep, best_objective=res.objective,
+                           has_solution=has, incumbent=res.solution,
+                           n_nodes=res.n_nodes, n_sols=res.n_sols,
+                           wall_s=res.wall_s, final=True, result=res)
+            return
+
+    # -- solve_many -------------------------------------------------------
+
+    def solve_many(self, cms: Sequence[CompiledModel], *,
+                   config: Optional[SolveConfig] = None,
+                   **overrides) -> List[SolveResult]:
+        """Solve N same-shape instances in ONE batched device dispatch.
+
+        Instances become a vmapped leading axis over the whole chunk
+        runner: each gets its own ``n_lanes`` lane block, its own EPS
+        pool (pools are padded to a common bucket with explicitly-failed
+        stores and stacked ``[N, S, V]``), its own B&B bound and its own
+        done flag — so statuses/objectives are identical to N sequential
+        `solve` calls, while compilation, dispatch overhead and device
+        occupancy are shared.  Single-device only (use the mesh engine
+        for scale-out of ONE instance).
+
+        Returns one `SolveResult` per instance, in input order.
+        ``wall_s`` is the shared batch wall clock.
+        """
+        cms = list(cms)
+        if not cms:
+            return []
+        cfg = self._config_for(config, overrides)
+        if cfg.mesh is not None:
+            raise ValueError("solve_many is single-device; it cannot be "
+                             "combined with a mesh config")
+        opts = cfg.search_options()
+        t0 = time.time()
+        self.stats["solves"] += 1
+        cms = [_canonical(cm) for cm in cms]
+        sig = shape_signature(cms[0])
+        for k, cm in enumerate(cms[1:], 1):
+            if shape_signature(cm) != sig:
+                raise ValueError(
+                    f"solve_many needs same-shape instances: instance {k} "
+                    f"has signature {shape_signature(cm)} != {sig}")
+        cm0 = cms[0]
+        N = len(cms)
+
+        pools = [eps.decompose(cm, cfg.resolved_eps_target(), opts)
+                 for cm in cms]
+        smax = max(p[0].shape[0] for p in pools)
+        size = _bucket(smax) if cfg.pad_pool else smax
+        padded = [eps.pad_pool(np.asarray(l), np.asarray(u), size)
+                  for l, u in pools]
+        subs_lb = jnp.asarray(np.stack([p[0] for p in padded]))
+        subs_ub = jnp.asarray(np.stack([p[1] for p in padded]))
+
+        cm_b = jax.tree.map(lambda *xs: jnp.stack(xs), *cms)
+        carry1 = _init_carry(cm0, cfg.n_lanes, opts)
+        carry = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (N,) + x.shape), carry1)
+
+        runner = self._runner_for(cm0, cfg, batched=True)
+        compiles0 = runner.n_compiles
+        builds_before = self.stats["runner_builds"]
+        while True:
+            carry = jax.block_until_ready(runner(cm_b, subs_lb, subs_ub,
+                                                 carry))
+            st, gbest, gdone, it, _ = carry
+            wall = time.time() - t0
+            if bool(np.asarray(gdone).all()):
+                break
+            if cfg.timeout_s is not None and wall > cfg.timeout_s:
+                break
+            if (cfg.max_supersteps is not None
+                    and int(np.asarray(it).max()) >= cfg.max_supersteps):
+                break
+        self.stats["last_solve_cold"] = (
+            runner.n_compiles > compiles0
+            or self.stats["runner_builds"] > builds_before)
+
+        st, gbest, gdone, it, _ = carry
+        wall = time.time() - t0
+        st = jax.device_get(st)       # one transfer for the whole batch
+        it = np.asarray(it)
+        results = []
+        for i in range(N):
+            sti = jax.tree.map(lambda x, i=i: x[i], st)
+            totals = S.lane_totals(sti)
+            # per-instance exhaustion (not gdone: see derive_result)
+            exhausted = bool(np.asarray(sti.done).all())
+            results.append(derive_result(
+                cms[i], sti.best_obj, sti.has_sol, sti.best_sol,
+                sti.incomplete, exhausted, totals["n_nodes"],
+                totals["n_fails"], totals["n_sols"], totals["n_sweeps"],
+                int(it[i]), wall))
+        return results
+
+
+# --------------------------------------------------------------------------
+# Module-level convenience: one shared default session
+# --------------------------------------------------------------------------
+
+_default_solver: Optional[Solver] = None
+
+
+def default_solver() -> Solver:
+    """The process-wide session used by `repro.solver.solve` and the
+    `engine.solve` deprecation shim — so even legacy callers get
+    compile caching across calls."""
+    global _default_solver
+    if _default_solver is None:
+        _default_solver = Solver(SolveConfig())
+    return _default_solver
+
+
+def solve(cm: CompiledModel, *, subs=None, config=None,
+          **overrides) -> SolveResult:
+    return default_solver().solve(cm, subs=subs, config=config, **overrides)
+
+
+def solve_many(cms: Sequence[CompiledModel], *, config=None,
+               **overrides) -> List[SolveResult]:
+    return default_solver().solve_many(cms, config=config, **overrides)
+
+
+def solve_iter(cm: CompiledModel, *, subs=None, config=None,
+               **overrides) -> Iterator[Progress]:
+    return default_solver().solve_iter(cm, subs=subs, config=config,
+                                       **overrides)

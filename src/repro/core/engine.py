@@ -1,106 +1,39 @@
-"""Top-level solver: EPS pool × lanes × mesh (paper §TURBO, evaluation).
+"""Legacy blocking entry point — now a thin shim over the session API.
 
-Execution hierarchy (the GPU→TPU mapping of DESIGN.md §2):
+The solver proper lives in `repro.core.api` (public façade
+``repro.solver``, DESIGN.md §11): `SolveConfig` presets, compile-cached
+`Solver` sessions, batched `solve_many` and the streaming `solve_iter`.
+This module keeps the original ``engine.solve(cm, n_lanes=..., ...)``
+signature working — it maps the kwarg sprawl onto a `SolveConfig` and
+delegates to the process-wide default session (so even legacy callers
+now get compile caching across calls) — and re-exports the status
+constants and `SolveResult` for back-compat (the chunk runner itself
+now lives in `api._run_chunk`).
 
-    mesh devices (shard_map)  ↔  GPU / SMs            (EPS pool is sharded)
-    lanes per device (batch)  ↔  CUDA blocks           (one subproblem each)
-    propagator sweep (tensor) ↔  threads within block  (one dense op)
+New code should use::
 
-EPS flow (DESIGN.md §9): ``solve`` decomposes the root into
-``eps_target`` consistent subproblems (`eps.decompose`), seeds the lane
-pool from them, and every superstep (`search.lanes_step`) replenishes
-idle lanes from the remaining pool before propagating.  ``eps_target=1``
-degrades to single-root search — the baseline the EPS speedup tests
-compare against.
-
-Propagation inside the superstep is **one lane-batched backend call**
-over the whole [n_lanes, V] store tensor (`SearchOptions.backend`
-selects gather / scatter / pallas — see core/backend.py); only the
-branch/backtrack bookkeeping is vmapped per lane.
-
-Branch & bound: each superstep ends with a cross-lane ``min`` and a
-``lax.pmin`` across every mesh axis — the analogue of TURBO's shared
-global-memory best bound, made deterministic by the lattice join — so
-every lane prunes against the best objective found *anywhere*
-(DESIGN.md §9 bound sharing).
-
-The solve loop runs in fixed-size jitted *chunks* so the host can enforce
-wall-clock timeouts (the paper uses 5 min / 30 s budgets) and so the
-multi-device while-loop has an identical trip count everywhere (the
-global-done flag is all-reduced in the body, never in the cond).
+    from repro import solver
+    res = solver.solve(cm)                              # one-shot
+    sess = solver.Solver(solver.SolveConfig.preset("prove"))
+    res = sess.solve(cm)                                # session (cached)
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from functools import partial
+import warnings
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax import lax
-from jax.sharding import PartitionSpec as P
 
 from repro.core.compile import CompiledModel
-from repro.core import eps
 from repro.core import search as S
+from repro.core import api as _api
 
-OPTIMAL = "OPTIMAL"
-SAT = "SAT"
-UNSAT = "UNSAT"
-UNKNOWN = "UNKNOWN"
-
-
-@dataclasses.dataclass
-class SolveResult:
-    status: str
-    objective: Optional[int]
-    solution: Optional[np.ndarray]
-    n_nodes: int
-    n_fails: int
-    n_sols: int
-    n_sweeps: int
-    n_supersteps: int
-    wall_s: float
-    complete: bool
-
-    @property
-    def nodes_per_sec(self) -> float:
-        return self.n_nodes / max(self.wall_s, 1e-9)
-
-
-def _chunk_body(cm: CompiledModel, subs_lb, subs_ub, opts: S.SearchOptions,
-                stop_on_first: bool, axis_names, carry):
-    st, gbest, gdone, it, pool_head = carry
-    st, new_head = S.lanes_step(cm, subs_lb, subs_ub, opts, st, gbest,
-                                pool_head[0])
-    pool_head = new_head[None].astype(jnp.int32)
-    best = jnp.min(st.best_obj)
-    done = jnp.all(st.done)
-    any_sol = jnp.any(st.has_sol)
-    if axis_names:
-        best = lax.pmin(best, axis_names)
-        done = lax.pmin(done.astype(jnp.int32), axis_names) == 1
-        any_sol = lax.pmax(any_sol.astype(jnp.int32), axis_names) == 1
-    gbest = jnp.minimum(gbest, best)
-    gdone = gdone | done
-    if stop_on_first:
-        gdone = gdone | any_sol
-    return st, gbest, gdone, it + 1, pool_head
-
-
-def _run_chunk(cm: CompiledModel, subs_lb, subs_ub, opts: S.SearchOptions,
-               stop_on_first: bool, chunk: int, axis_names, carry):
-    body = partial(_chunk_body, cm, subs_lb, subs_ub, opts, stop_on_first,
-                   axis_names)
-    it0 = carry[3]
-
-    def cond(c):
-        return (~c[2]) & (c[3] - it0 < chunk)
-
-    return lax.while_loop(cond, body, carry)
+# re-exports (historical home of these names; baseline.py and the test
+# suite import them from here)
+from repro.core.api import (  # noqa: F401
+    OPTIMAL, SAT, UNSAT, UNKNOWN, SolveResult, Improvement, SolveConfig,
+    derive_result)
 
 
 def solve(cm: CompiledModel,
@@ -115,111 +48,26 @@ def solve(cm: CompiledModel,
           subs: Optional[tuple] = None,
           eps_target: Optional[int] = None,
           ) -> SolveResult:
-    """Solve a compiled model.
+    """Deprecated blocking solve — use ``repro.solver`` (DESIGN.md §11).
 
-    ``eps_target`` controls the EPS decomposition (DESIGN.md §9): the
-    root is split into ~``eps_target`` consistent subproblems that seed
-    the shared lane pool; idle lanes replenish from it every superstep.
-    ``eps_target=1`` is single-root search (one lane does all the work —
-    the comparison baseline); the default ``None`` uses
-    ``n_subproblems`` or ``4 * n_lanes``, the paper's
-    several-subproblems-per-worker EPS rule of thumb.
-
-    Single-device by default; pass ``mesh`` + ``lane_axes`` (mesh axis names
-    to shard lanes/subproblems over) for the multi-device engine.  `subs`
-    overrides the EPS pool (used by tests and the dry-run).  The
-    propagation backend is picked per `opts.backend` ("gather" default;
-    "pallas" runs the VMEM kernel, interpret-mode on CPU), e.g.
-    ``solve(cm, opts=SearchOptions(backend="pallas"))``.
+    Exactly equivalent to building a `SolveConfig` from these kwargs and
+    calling ``repro.solver.solve(cm, config=cfg, subs=subs)``; kept so
+    existing callers and the paper-era examples keep running.  The
+    delegation goes through the shared default session, so repeated
+    calls on same-shape models reuse compiled runners.
     """
-    opts = opts or S.SearchOptions()
-    t0 = time.time()
-    if subs is None:
-        target = (eps_target if eps_target is not None
-                  else (n_subproblems or 4 * n_lanes))
-        subs_lb, subs_ub = eps.decompose(cm, target, opts)
-    else:
-        subs_lb, subs_ub = subs
-    subs_lb = jnp.asarray(subs_lb)
-    subs_ub = jnp.asarray(subs_ub)
-
-    dt = cm.jdtype
-    big = jnp.asarray(jnp.iinfo(dt).max // 4, dt)
-
-    if mesh is not None and lane_axes:
-        n_dev = int(np.prod([mesh.shape[a] for a in lane_axes]))
-        # pad the pool to a multiple of the device count, shard it
-        Stot = subs_lb.shape[0]
-        pad = (-Stot) % n_dev
-        if pad:
-            # pad with explicitly-failed stores (consumed instantly)
-            fl = np.asarray(subs_lb[:1]).repeat(pad, 0)
-            fu = np.asarray(subs_ub[:1]).repeat(pad, 0)
-            fl[:, 0], fu[:, 0] = 1, 0
-            subs_lb = jnp.concatenate([subs_lb, jnp.asarray(fl)])
-            subs_ub = jnp.concatenate([subs_ub, jnp.asarray(fu)])
-
-        def device_solver(subs_lb_l, subs_ub_l, carry):
-            return _run_chunk(cm, subs_lb_l, subs_ub_l, opts,
-                              opts.stop_on_first, chunk, lane_axes, carry)
-
-        spec = P(lane_axes)
-        # global lane state: lane axis is sharded over `lane_axes`; each
-        # device sees `n_lanes` local lanes indexing its local pool shard.
-        state0 = S.init_lanes(cm, n_lanes * n_dev, opts)
-        carry = (state0, big, jnp.asarray(False), jnp.asarray(0, jnp.int32),
-                 jnp.zeros((n_dev,), jnp.int32))
-        state_spec = jax.tree.map(lambda _: spec, state0)
-        carry_spec = (state_spec, P(), P(), P(), spec)
-        runner = jax.jit(jax.shard_map(
-            device_solver, mesh=mesh,
-            in_specs=(spec, spec, carry_spec), out_specs=carry_spec,
-            check_vma=False))
-        run = lambda c: runner(subs_lb, subs_ub, c)  # noqa: E731
-    else:
-        state0 = S.init_lanes(cm, n_lanes, opts)
-        carry = (state0, big, jnp.asarray(False), jnp.asarray(0, jnp.int32),
-                 jnp.zeros((1,), jnp.int32))
-        runner = jax.jit(partial(_run_chunk, cm, subs_lb, subs_ub, opts,
-                                 opts.stop_on_first, chunk, ()))
-        run = runner
-
-    while True:
-        carry = jax.block_until_ready(run(carry))
-        st, gbest, gdone, it, _ = carry
-        if bool(gdone):
-            break
-        if timeout_s is not None and time.time() - t0 > timeout_s:
-            break
-        if max_supersteps is not None and int(it) >= max_supersteps:
-            break
-
-    st, gbest, gdone, it, _ = carry
-    # pull incumbent from the lane that owns it (replicated out of shard_map)
-    best_obj = np.asarray(st.best_obj)
-    has_sol = np.asarray(st.has_sol)
-    flat_best = best_obj.reshape(-1)
-    wall = time.time() - t0
-    complete = bool(gdone) and not bool(np.asarray(st.incomplete).any())
-
-    n_nodes = int(np.asarray(st.n_nodes).sum())
-    n_fails = int(np.asarray(st.n_fails).sum())
-    n_sols = int(np.asarray(st.n_sols).sum())
-    n_sweeps = int(np.asarray(st.n_sweeps).sum())
-
-    if has_sol.any():
-        i = int(flat_best.argmin()) if cm.obj_var >= 0 else \
-            int(np.asarray(has_sol).reshape(-1).argmax())
-        sol = np.asarray(st.best_sol).reshape(-1, cm.n_vars)[i]
-        obj = int(flat_best[i]) if cm.obj_var >= 0 else None
-        status = (OPTIMAL if complete and cm.obj_var >= 0 else SAT)
-        if cm.obj_var < 0:
-            status = SAT
-    else:
-        sol, obj = None, None
-        status = UNSAT if complete else UNKNOWN
-
-    return SolveResult(status=status, objective=obj, solution=sol,
-                       n_nodes=n_nodes, n_fails=n_fails, n_sols=n_sols,
-                       n_sweeps=n_sweeps, n_supersteps=int(it), wall_s=wall,
-                       complete=complete)
+    warnings.warn(
+        "engine.solve is deprecated; use repro.solver "
+        "(Solver/SolveConfig sessions — see DESIGN.md §11)",
+        DeprecationWarning, stacklevel=2)
+    o = opts or S.SearchOptions()
+    cfg = SolveConfig(
+        n_lanes=n_lanes,
+        eps_target=(eps_target if eps_target is not None else n_subproblems),
+        chunk=chunk, timeout_s=timeout_s, max_supersteps=max_supersteps,
+        backend=o.backend, backend_opts=o.backend_opts,
+        var_strategy=o.var_strategy, val_strategy=o.val_strategy,
+        max_depth=o.max_depth, max_fixpoint_iters=o.max_fixpoint_iters,
+        stop_on_first=o.stop_on_first, mesh=mesh,
+        lane_axes=tuple(lane_axes))
+    return _api.default_solver().solve(cm, subs=subs, config=cfg)

@@ -78,3 +78,25 @@ def decompose(cm: CompiledModel, target: int,
     subs_lb = np.stack([p[0] for p in pool])
     subs_ub = np.stack([p[1] for p in pool])
     return subs_lb, subs_ub
+
+
+def pad_pool(subs_lb: np.ndarray, subs_ub: np.ndarray,
+             size: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Pad a pool ``[S, V]`` up to ``size`` entries with explicitly-failed
+    stores (``lb[0] > ub[0]``) — a lane that pops one fails it in a
+    single superstep and re-arms, so statuses/objectives are unchanged.
+
+    Used by the session API for two shape-stabilization jobs
+    (DESIGN.md §11): bucketing pool sizes to powers of two so the
+    compiled runner is reused across instances whose decompositions
+    differ slightly, and rounding the pool to a device-count multiple
+    for the sharded mesh engine.  ``size <= S`` is a no-op.
+    """
+    s = subs_lb.shape[0]
+    if size <= s:
+        return subs_lb, subs_ub
+    fl = np.repeat(np.asarray(subs_lb[:1]).copy(), size - s, axis=0)
+    fu = np.repeat(np.asarray(subs_ub[:1]).copy(), size - s, axis=0)
+    fl[:, 0], fu[:, 0] = 1, 0
+    return (np.concatenate([np.asarray(subs_lb), fl]),
+            np.concatenate([np.asarray(subs_ub), fu]))

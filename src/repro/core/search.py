@@ -356,3 +356,13 @@ def lanes_best(st: LaneState, dt):
 
 def all_done(st: LaneState) -> jax.Array:
     return jnp.all(st.done)
+
+
+def lane_totals(st: LaneState) -> dict:
+    """Cross-lane counter totals, as host ints — the stats block every
+    terminal `SolveResult` is assembled from (api.derive_result).  Works
+    on device lane states and on host-side (numpy) slices alike."""
+    return dict(n_nodes=int(np.asarray(st.n_nodes).sum()),
+                n_fails=int(np.asarray(st.n_fails).sum()),
+                n_sols=int(np.asarray(st.n_sols).sum()),
+                n_sweeps=int(np.asarray(st.n_sweeps).sum()))

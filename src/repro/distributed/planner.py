@@ -26,7 +26,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import engine
+from repro import solver
 from repro.core import search as S
 from repro.core.model import Model
 from repro.core.models import rcpsp
@@ -60,10 +60,9 @@ def plan_partition(layer_costs: Sequence[int], layer_mems: Sequence[int],
               <= int(mem_cap))
     m.minimize(T)
     m.branch_on(g + [T])
-    res = engine.solve(m.compile(), n_lanes=16, n_subproblems=64,
-                       opts=S.SearchOptions(var_strategy=S.INPUT_ORDER,
-                                            max_depth=1024),
-                       timeout_s=timeout_s)
+    res = solver.solve(m.compile(), config=solver.SolveConfig(
+        n_lanes=16, eps_target=64, var_strategy=S.INPUT_ORDER,
+        max_depth=1024, timeout_s=timeout_s))
     if res.solution is None:
         raise ValueError(f"no feasible partition ({res.status}): "
                          f"mem_cap={mem_cap} too tight?")
@@ -92,10 +91,9 @@ def schedule_microbatches(stage_costs: Sequence[int], n_microbatches: int,
     inst = rcpsp.RCPSP(durations=dur, precedences=prec, usage=usage,
                        capacity=cap, name=f"pipe-{Sn}x{M}")
     model, handles = rcpsp.build_model(inst)
-    res = engine.solve(model.compile(), n_lanes=16, n_subproblems=64,
-                       opts=S.SearchOptions(var_strategy=S.MIN_LB,
-                                            max_depth=2048),
-                       timeout_s=timeout_s)
+    res = solver.solve(model.compile(), config=solver.SolveConfig(
+        n_lanes=16, eps_target=64, var_strategy=S.MIN_LB,
+        max_depth=2048, timeout_s=timeout_s))
     if res.solution is None:
         raise RuntimeError(f"scheduler failed: {res.status}")
     starts = [[int(res.solution[handles["s"][tid(mb, st)].idx])

@@ -1,9 +1,16 @@
 """Solver launcher + solver-on-production-mesh dry-run.
 
-  PYTHONPATH=src python -m repro.launch.solve --n 10            # solve
+  PYTHONPATH=src python -m repro.launch.solve --n 10                # solve
+  PYTHONPATH=src python -m repro.launch.solve --preset fast --n 12
   PYTHONPATH=src python -m repro.launch.solve --dryrun [--multi-pod]
 
-The dry-run lowers+compiles one solver chunk (`engine._run_chunk` under
+``--preset {prove,first,fast}`` picks the named `SolveConfig` recipe
+(DESIGN.md §11): `prove` runs B&B to a proof (default), `first` stops at
+the first solution, `fast` caps fixpoint sweeps (§Perf P0).  The solve
+path goes through the session API (`repro.solver`), streaming anytime
+incumbents as they improve.
+
+The dry-run lowers+compiles one solver chunk (`api._run_chunk` under
 shard_map) for the full production mesh — the paper's own system passing
 the same bar as the LM cells: lanes sharded over all 256/512 devices,
 bound sharing via pmin visible as `all-reduce` in the HLO.
@@ -15,11 +22,14 @@ if "XLA_FLAGS" not in os.environ and "--dryrun" in __import__("sys").argv:
 
 import argparse          # noqa: E402
 import time              # noqa: E402
-from functools import partial  # noqa: E402
+import warnings          # noqa: E402
 
 import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np       # noqa: E402
+
+# CLI name -> SolveConfig preset name
+_PRESETS = {"prove": "prove", "first": "first_solution", "fast": "fast"}
 
 
 def main():
@@ -34,8 +44,12 @@ def main():
                          "into ~this many subproblems; 1 = single-root "
                          "search; default --subs")
     ap.add_argument("--timeout", type=float, default=120)
+    ap.add_argument("--preset", choices=sorted(_PRESETS), default="prove",
+                    help="SolveConfig preset (DESIGN.md §11): prove = full "
+                         "B&B proof, first = stop at first solution, fast "
+                         "= capped fixpoint sweeps (§Perf P0)")
     ap.add_argument("--fast", action="store_true",
-                    help="optimized profile (capped fixpoint, §Perf P0)")
+                    help="DEPRECATED: use --preset fast")
     from repro.core.backend import available_backends
     ap.add_argument("--backend", default="gather",
                     choices=available_backends(),
@@ -49,8 +63,13 @@ def main():
     ap.add_argument("--file", default=None)
     args = ap.parse_args()
 
-    from repro.core import engine, search as S
+    from repro import solver
     from repro.core.models import rcpsp
+
+    if args.fast:
+        warnings.warn("--fast is deprecated; use --preset fast",
+                      DeprecationWarning)
+        args.preset = "fast"
 
     if args.file:
         inst = (rcpsp.parse_psplib_sm(args.file) if args.file.endswith(".sm")
@@ -62,13 +81,18 @@ def main():
     cm = m.compile()
     backend_opts = ((("lane_tile", args.lane_tile),)
                     if args.backend == "pallas" else ())
-    opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=1024,
-                           max_fixpoint_iters=4 if args.fast else None,
-                           backend=args.backend, backend_opts=backend_opts)
+    cfg = solver.SolveConfig.preset(
+        _PRESETS[args.preset],
+        n_lanes=args.lanes,
+        eps_target=(args.eps_target if args.eps_target is not None
+                    else args.subs),
+        timeout_s=args.timeout, backend=args.backend,
+        backend_opts=backend_opts)
 
     if args.dryrun:
         from repro.launch.mesh import make_production_mesh
-        from repro.core.engine import _run_chunk
+        from repro.core.api import _run_chunk, _init_carry
+        from repro.core import search as S
         from jax.sharding import PartitionSpec as P
         mesh = make_production_mesh(multi_pod=args.multi_pod)
         axes = tuple(mesh.axis_names)
@@ -76,15 +100,13 @@ def main():
         lanes = 8                                  # per device
         V = cm.n_vars
         Spool = n_dev * 16
-        st = S.init_lanes(cm, lanes * n_dev, opts)
-        big = jnp.asarray(np.iinfo(np.int32).max // 4, cm.jdtype)
-        carry = (st, big, jnp.asarray(False), jnp.asarray(0, jnp.int32),
-                 jnp.zeros((n_dev,), jnp.int32))
+        opts = cfg.search_options()
+        carry = _init_carry(cm, lanes * n_dev, opts, n_heads=n_dev)
         spec = P(axes)
-        state_spec = jax.tree.map(lambda _: spec, st)
+        state_spec = jax.tree.map(lambda _: spec, carry[0])
         carry_spec = (state_spec, P(), P(), P(), spec)
         dev_fn = lambda sl, su, c: _run_chunk(   # noqa: E731
-            cm, sl, su, opts, False, 64, axes, c)
+            opts, False, 64, axes, cm, sl, su, c)
         f = jax.jit(jax.shard_map(dev_fn, mesh=mesh,
                                   in_specs=(spec, spec, carry_spec),
                                   out_specs=carry_spec, check_vma=False))
@@ -113,12 +135,19 @@ def main():
         return
 
     t0 = time.time()
-    res = engine.solve(cm, n_lanes=args.lanes, n_subproblems=args.subs,
-                       eps_target=args.eps_target, opts=opts,
-                       timeout_s=args.timeout)
+    sess = solver.Solver(cfg)
+    res = None
+    for ev in sess.solve_iter(cm):
+        if ev.final:
+            res = ev.result
+        elif ev.best_objective is not None and ev.incumbent is not None:
+            # a fresh incumbent this chunk — the anytime answer
+            print(f"  [{ev.wall_s:6.1f}s] superstep={ev.superstep:6d} "
+                  f"incumbent={ev.best_objective} nodes={ev.n_nodes}")
     print(f"{inst.name}: {res.status} objective={res.objective} "
           f"nodes={res.n_nodes} ({res.nodes_per_sec:.0f}/s) "
-          f"supersteps={res.n_supersteps} "
+          f"supersteps={res.n_supersteps} improvements="
+          f"{[i.objective for i in res.improvements]} "
           f"wall={time.time()-t0:.1f}s complete={res.complete}")
 
 

@@ -1,0 +1,35 @@
+"""``repro.solver`` — the public solver surface (DESIGN.md §11).
+
+One import serves the whole serving story::
+
+    from repro import solver
+
+    cfg = solver.SolveConfig.preset("prove", backend="pallas")
+    sess = solver.Solver(cfg)
+    res = sess.solve(cm)                 # cold: compiles the chunk runner
+    res2 = sess.solve(cm2)               # warm: same shapes, no compile
+    results = sess.solve_many(cms)       # N instances, ONE device dispatch
+    for ev in sess.solve_iter(cm):       # anytime incumbent stream
+        print(ev.superstep, ev.best_objective)
+
+Module-level `solve` / `solve_many` / `solve_iter` use a process-wide
+default session, so casual callers still amortize compilation.  The
+legacy ``repro.core.engine.solve`` is a deprecation shim over this
+module.
+"""
+
+from repro.core.api import (  # noqa: F401
+    OPTIMAL, SAT, UNSAT, UNKNOWN,
+    PRESETS, SolveConfig, Solver,
+    SolveResult, Progress, Improvement,
+    default_solver, derive_result, shape_signature,
+    solve, solve_iter, solve_many,
+)
+
+__all__ = [
+    "OPTIMAL", "SAT", "UNSAT", "UNKNOWN",
+    "PRESETS", "SolveConfig", "Solver",
+    "SolveResult", "Progress", "Improvement",
+    "default_solver", "derive_result", "shape_signature",
+    "solve", "solve_iter", "solve_many",
+]
