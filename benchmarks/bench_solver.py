@@ -19,7 +19,10 @@ SearchOptions recipes.
 §10: rcpsp, nqueens, coloring, knapsack, jobshop) through the
 EPS-decomposed engine; ``--zoo-smoke --json BENCH_propagation_smoke.json``
 is the `make check` tier — small instances, records merged into the bench
-JSON as its `solver` section.
+JSON as its `solver` section.  Since §12 each record also carries the
+typed propagator-table size (`n_props`, per-kind split, and
+`n_props_decomposed` — the pre-§12 ReifLinLe blowup the native lowering
+replaced), so the table-size win is tracked per PR alongside nodes/s.
 
 ``--throughput`` is the serving-story benchmark (DESIGN.md §11): one
 `Solver` session over 4 same-shape knapsack instances — cold-vs-warm
@@ -118,17 +121,31 @@ def run_zoo(timeout_s: float, lanes: int, eps_target: int, rows: List[str],
                 else zoo.bench_instance(name, seed=seed))
         m, h = mod.build_model(inst)
         cm = m.compile()
+        # typed-table size vs the pre-§12 ReifLinLe decomposition (models
+        # without a native lowering — knapsack — compile identically)
+        import inspect
+        if "decompose" in inspect.signature(mod.build_model).parameters:
+            cmd = mod.build_model(inst, decompose=True)[0].compile()
+            decomposed_props = cmd.total_props
+        else:
+            decomposed_props = cm.total_props
         res = sess.solve(cm)
         # True/False = checked; None = nothing to check (timeout/UNSAT)
         checked = zoo.ground_check(mod, inst, h, res)
         rows.append(f"zoo,{name},{backend},{res.status},{res.objective},"
-                    f"{res.nodes_per_sec:.0f},{res.wall_s:.2f},{checked}")
+                    f"{res.nodes_per_sec:.0f},{res.wall_s:.2f},{checked},"
+                    f"P={cm.total_props}/{decomposed_props}")
         # time to the *proven* optimum: wall clock until B&B returned
         # OPTIMAL, jit compile included (the honest CPU-emulation figure);
         # the improvements trace now also gives time-to-incumbent
         records.append(dict(
             model=name, instance=inst.name, backend=backend,
             status=res.status, objective=res.objective,
+            n_props=cm.total_props,
+            n_props_by_kind=dict(lin=cm.n_props, alldiff=cm.n_alldiff,
+                                 cumulative=cm.n_cumulative),
+            n_props_decomposed=decomposed_props,
+            n_vars=cm.n_vars,
             n_nodes=res.n_nodes, nodes_per_sec=res.nodes_per_sec,
             n_supersteps=res.n_supersteps,
             time_to_proven_optimum_s=(
@@ -292,7 +309,7 @@ def main(argv=None):
     records = None
     if args.zoo or args.zoo_smoke:
         rows.append("zoo,model,backend,status,objective,nodes_per_sec,"
-                    "time_s,ground_check")
+                    "time_s,ground_check,props_native/decomposed")
         smoke = (args.zoo_size == "small" if args.zoo_size
                  else args.zoo_smoke)
         records = run_zoo(timeout, args.lanes, args.eps_target, rows,

@@ -24,7 +24,10 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOCS = ("README.md", "DESIGN.md")
-PATH_RE = re.compile(r"[A-Za-z0-9_][A-Za-z0-9_./-]*\.(?:py|sh|md|json|txt)")
+# the extension must end the token (else `jax.sharding` reads as a
+# dangling `jax.sh` reference)
+PATH_RE = re.compile(
+    r"[A-Za-z0-9_][A-Za-z0-9_./-]*\.(?:py|sh|md|json|txt)(?![A-Za-z0-9_])")
 SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules"}
 
 

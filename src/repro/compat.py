@@ -1,0 +1,135 @@
+"""JAX API compatibility shim (single import point for drifted APIs).
+
+The repo targets the *installed* JAX (currently 0.4.37 in this container)
+while staying forward-compatible with the 0.5+/0.6+ API renames that the
+code was originally written against.  Everything that drifted lives here,
+and the rest of the codebase imports these names instead of reaching into
+``jax.sharding`` / ``jax.experimental`` directly:
+
+=====================  =========================  =========================
+name here              modern JAX (≥ 0.6)         legacy JAX (0.4.x)
+=====================  =========================  =========================
+``AxisType``           ``jax.sharding.AxisType``  local enum stand-in
+``make_mesh``          ``jax.make_mesh(...,       ``jax.make_mesh`` without
+                       axis_types=...)``          ``axis_types``
+``get_abstract_mesh``  ``jax.sharding.            ``thread_resources.env.
+                       get_abstract_mesh()``      physical_mesh`` (set by
+                                                  the ``with mesh:`` ctx)
+``use_mesh``           ``jax.sharding.use_mesh``  the `Mesh` object itself
+                       / ``jax.set_mesh``         (Mesh is a context mgr)
+``shard_map``          ``jax.shard_map(...,       ``jax.experimental.
+                       check_vma=...)``           shard_map.shard_map(...,
+                                                  check_rep=...)``
+``cost_analysis``      dict-valued                one-element list of dicts
+=====================  =========================  =========================
+
+Minimum supported JAX: **0.4.37** (see README §Requirements).  All shims
+are resolved once at import; the fallbacks use only APIs present in every
+version in the supported range.
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+MIN_JAX = "0.4.37"
+
+
+# -- AxisType ---------------------------------------------------------------
+
+if hasattr(jax.sharding, "AxisType"):           # modern JAX
+    AxisType = jax.sharding.AxisType
+else:
+    class AxisType(enum.Enum):
+        """Stand-in for ``jax.sharding.AxisType`` on legacy JAX.
+
+        Legacy meshes have no user-facing axis-type concept (everything
+        behaves like ``Auto``), so these values are accepted and
+        discarded by `make_mesh`.
+        """
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+_MAKE_MESH_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+    """``jax.make_mesh`` that tolerates the ``axis_types`` kwarg drift.
+
+    On modern JAX the axis types are forwarded; on legacy JAX (where all
+    mesh axes are implicitly auto-sharded) they are dropped.
+    """
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if axis_types is not None and _MAKE_MESH_AXIS_TYPES:
+        kw["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+
+
+# -- ambient mesh -----------------------------------------------------------
+
+def get_abstract_mesh():
+    """The ambient mesh set by `use_mesh` (or None when there is none).
+
+    Modern JAX tracks an abstract mesh; legacy JAX tracks the physical
+    mesh of the active ``with mesh:`` context.  Callers only rely on the
+    returned object having ``.axis_names`` (possibly empty).
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    from jax._src import mesh as _mesh_lib
+    env_mesh = _mesh_lib.thread_resources.env.physical_mesh
+    return None if env_mesh.empty else env_mesh
+
+
+def use_mesh(mesh):
+    """Context manager making `mesh` ambient (for bare-PartitionSpec
+    ``with_sharding_constraint`` and friends) across JAX versions."""
+    fn = getattr(jax.sharding, "use_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh        # legacy: Mesh is itself the context manager
+
+
+# -- compiled-artifact introspection ----------------------------------------
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as one flat dict across JAX versions
+    (legacy JAX returns a one-element list of per-program dicts)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+# -- shard_map --------------------------------------------------------------
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+    """``jax.shard_map`` across the experimental→public move.
+
+    The replication-check kwarg was renamed ``check_rep`` → ``check_vma``;
+    pass the modern name here and it is translated when running on legacy
+    JAX.
+    """
+    native = getattr(jax, "shard_map", None)
+    if native is not None:
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return native(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _legacy
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    return _legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   **kw)

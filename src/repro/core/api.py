@@ -258,6 +258,8 @@ def shape_signature(cm: CompiledModel) -> tuple:
     (e.g. zoo generator outputs across seeds) reuse one compiled
     runner; the table *contents* are runtime arguments."""
     return (cm.n_vars, cm.n_props, cm.k_terms, cm.d_occ,
+            cm.n_alldiff, cm.ad_width, cm.ad_docc,
+            cm.n_cumulative, cm.cu_width, cm.cu_docc, cm.horizon,
             int(cm.branch_vars.shape[0]), cm.obj_var, cm.dtype)
 
 
@@ -469,7 +471,8 @@ class Solver:
             state_spec = jax.tree.map(lambda _: spec, state0)
             carry_spec = (state_spec, P(), P(), P(), spec)
             cm_spec = jax.tree.map(lambda _: P(), cm)
-            fn = jax.jit(jax.shard_map(
+            from repro.compat import shard_map
+            fn = jax.jit(shard_map(
                 dev_fn, mesh=cfg.mesh,
                 in_specs=(cm_spec, spec, spec, carry_spec),
                 out_specs=carry_spec, check_vma=False))

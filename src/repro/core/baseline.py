@@ -8,9 +8,11 @@ eventless AC-1 loop with), depth-first search with chronological
 backtracking on copied stores, and branch & bound.
 
 It shares the Model/CompiledModel representation and uses the *same*
-propagator math (one numpy transcription of `propagator_candidates` row
-semantics), so objective values must agree exactly with the parallel
-engine — that agreement is itself a correctness test of both.
+propagator math (one numpy transcription per propagator kind of the
+`fixpoint` tile semantics — ReifLinLe rows, AllDifferent Hall-interval
+bounds consistency, Cumulative time-table filtering; DESIGN.md §12), so
+objective values must agree exactly with the parallel engine — that
+agreement is itself a correctness test of both.
 """
 
 from __future__ import annotations
@@ -81,8 +83,103 @@ def _row_update(cm, lb, ub, p: int,
     return changed
 
 
+def _alldiff_update(lb, ub, vs, offs, box_lo, box_hi) -> List[int]:
+    """Hall-interval bounds(Z) consistency for one AllDifferent row —
+    numpy transcription of `fixpoint.alldiff_candidates_tile`."""
+    yl = lb[vs].astype(np.int64) + offs
+    yu = ub[vs].astype(np.int64) + offs
+    n = len(vs)
+    changed: List[int] = []
+
+    def tighten_lb(v: int, val: int):
+        val = min(val, int(box_hi[v]))
+        if val > lb[v]:
+            lb[v] = val
+            changed.append(v)
+
+    def tighten_ub(v: int, val: int):
+        val = max(val, int(box_lo[v]))
+        if val < ub[v]:
+            ub[v] = val
+            changed.append(v)
+
+    for i in range(n):
+        a = int(yl[i])
+        for j in range(n):
+            b = int(yu[j])
+            if a > b:
+                continue
+            inside = (yl >= a) & (yu <= b)
+            cnt = int(inside.sum())
+            width = b - a + 1
+            if cnt > width:                  # pigeonhole: unsatisfiable
+                tighten_lb(int(vs[0]), int(box_hi[vs[0]]) + 1)
+                return changed
+            if cnt == width:                 # Hall interval: push others out
+                for k in range(n):
+                    if inside[k]:
+                        continue
+                    if a <= yl[k] <= b:
+                        tighten_lb(int(vs[k]), b + 1 - int(offs[k]))
+                    if a <= yu[k] <= b:
+                        tighten_ub(int(vs[k]), a - 1 - int(offs[k]))
+    return changed
+
+
+def _cumulative_update(lb, ub, svars, durs, dems, cap, horizon,
+                       box_lo, box_hi) -> List[int]:
+    """Time-table filtering for one Cumulative row — numpy transcription
+    of `fixpoint.cumulative_candidates_tile`."""
+    est = lb[svars].astype(np.int64)
+    lst = ub[svars].astype(np.int64)
+    n = len(svars)
+    changed: List[int] = []
+    profile = np.zeros(horizon, dtype=np.int64)
+    for t in range(n):
+        if durs[t] > 0 and dems[t] > 0 and lst[t] < est[t] + durs[t]:
+            profile[max(int(lst[t]), 0):int(est[t] + durs[t])] += dems[t]
+    if (profile > cap).any():                # overload: unsatisfiable
+        # fail through the first effective task (profile > 0 implies one
+        # exists): box_hi = ub0 + 1 always crosses the upper bound
+        t0 = next(t for t in range(n) if durs[t] > 0 and dems[t] > 0)
+        v0 = int(svars[t0])
+        if lb[v0] < int(box_hi[v0]):
+            lb[v0] = int(box_hi[v0])
+            changed.append(v0)
+        return changed
+    for t in range(n):
+        if durs[t] <= 0 or dems[t] <= 0:
+            continue
+        own = np.zeros(horizon, dtype=np.int64)
+        if lst[t] < est[t] + durs[t]:
+            own[max(int(lst[t]), 0):int(est[t] + durs[t])] = dems[t]
+        bad = profile - own + dems[t] > cap
+        csum = np.concatenate([[0], np.cumsum(bad)])
+        ends = np.minimum(np.arange(horizon) + int(durs[t]), horizon)
+        feas = (csum[ends] - csum[:-1]) == 0
+        v = int(svars[t])
+        ok_lb = np.nonzero(feas & (np.arange(horizon) >= est[t]))[0]
+        new_lb = int(ok_lb[0]) if len(ok_lb) else int(box_hi[v]) + 1
+        new_lb = min(new_lb, int(box_hi[v]))
+        if new_lb > lb[v]:
+            lb[v] = new_lb
+            changed.append(v)
+        ok_ub = np.nonzero(feas & (np.arange(horizon) <= lst[t]))[0]
+        new_ub = int(ok_ub[-1]) if len(ok_ub) else int(box_lo[v]) - 1
+        new_ub = max(new_ub, int(box_lo[v]))
+        if new_ub < ub[v]:
+            ub[v] = new_ub
+            changed.append(v)
+    return changed
+
+
 class SequentialSolver:
-    """Event-queue propagation + DFS + B&B on numpy stores."""
+    """Event-queue propagation + DFS + B&B on numpy stores.
+
+    Propagator ids: ``[0, P)`` are the ReifLinLe rows, ``[P, P+A)`` the
+    AllDifferent rows, ``[P+A, P+A+C)`` the Cumulative rows — all in one
+    event queue with per-kind watch lists (DESIGN.md §12).
+    """
 
     def __init__(self, cm: CompiledModel, opts: Optional[S.SearchOptions] = None):
         self.cm = cm
@@ -94,8 +191,22 @@ class SequentialSolver:
         self.box_lo = np.asarray(cm.box_lo)
         self.box_hi = np.asarray(cm.box_hi)
         self.branch_vars = np.asarray(cm.branch_vars)
-        P = cm.n_props
-        # watchers: var -> props that mention it (terms or reif bool)
+        P, A, C = cm.n_props, cm.n_alldiff, cm.n_cumulative
+        self.n_pids = P + A + C
+        # native banks, de-padded to per-row member lists
+        ad_mask = np.asarray(cm.ad_mask)
+        self.ad_rows = []
+        for a in range(A):
+            sel = ad_mask[a] != 0
+            self.ad_rows.append((np.asarray(cm.ad_vars)[a][sel],
+                                 np.asarray(cm.ad_offs)[a][sel]))
+        self.cu_rows = []
+        for c in range(C):
+            self.cu_rows.append((np.asarray(cm.cu_svar)[c],
+                                 np.asarray(cm.cu_dur)[c],
+                                 np.asarray(cm.cu_dem)[c],
+                                 int(np.asarray(cm.cu_cap)[c])))
+        # watchers: var -> pids that mention it (terms/reif bool/members)
         self.watch: List[List[int]] = [[] for _ in range(cm.n_vars)]
         for p in range(P):
             seen = set()
@@ -105,10 +216,30 @@ class SequentialSolver:
             seen.add(int(self.bidx[p]))
             for v in seen:
                 self.watch[v].append(p)
+        for a, (vs, _) in enumerate(self.ad_rows):
+            for v in set(int(x) for x in vs):
+                self.watch[v].append(P + a)
+        for c, (vs, du, de, _) in enumerate(self.cu_rows):
+            eff = set(int(v) for v, d_, r_ in zip(vs, du, de)
+                      if d_ > 0 and r_ > 0)
+            for v in eff:
+                self.watch[v].append(P + A + c)
+
+    def _apply_pid(self, lb, ub, pid: int) -> List[int]:
+        P, A = self.cm.n_props, self.cm.n_alldiff
+        if pid < P:
+            return _row_update(self.cm, lb, ub, pid, self.vidx, self.coef,
+                               self.rhs, self.bidx, self.box_lo, self.box_hi)
+        if pid < P + A:
+            vs, offs = self.ad_rows[pid - P]
+            return _alldiff_update(lb, ub, vs, offs, self.box_lo, self.box_hi)
+        vs, du, de, cap = self.cu_rows[pid - P - A]
+        return _cumulative_update(lb, ub, vs, du, de, cap, self.cm.horizon,
+                                  self.box_lo, self.box_hi)
 
     def propagate(self, lb, ub, dirty: Optional[List[int]] = None) -> bool:
         """Event loop to fixpoint. Returns False on failure."""
-        P = self.cm.n_props
+        P = self.n_pids
         if dirty is None:
             queue = list(range(P))
             queued = [True] * P
@@ -125,8 +256,7 @@ class SequentialSolver:
             p = queue[qi]
             qi += 1
             queued[p] = False
-            changed = _row_update(self.cm, lb, ub, p, self.vidx, self.coef,
-                                  self.rhs, self.bidx, self.box_lo, self.box_hi)
+            changed = self._apply_pid(lb, ub, p)
             for v in changed:
                 if lb[v] > ub[v]:
                     return False
@@ -134,7 +264,7 @@ class SequentialSolver:
                     if not queued[q]:
                         queued[q] = True
                         queue.append(q)
-            if qi > 4096 * P:                # safety valve
+            if qi > 4096 * max(P, 1):        # safety valve
                 raise RuntimeError("event loop runaway")
         return True
 

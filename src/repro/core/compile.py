@@ -1,11 +1,20 @@
 """⟦.⟧ — lower a Model to dense guarded-command tables (paper Prop. 4).
 
-Every constraint becomes one row of the *propagator table*; the row is the
-guarded-normal-form of the paper: the ask set is {b} (plus the implicit
-guard "still consistent"), the tells are the interval tightenings of the
-reified linear inequality.
+Every constraint becomes one row of a *typed propagator table*
+(DESIGN.md §12): the table is split into per-kind **banks** —
 
-Two dual views of the same program are produced:
+* ``ReifLinLe``   (vidx/coef/rhs/bidx): reified linear inequalities, the
+  paper's guarded-normal-form rows;
+* ``AllDifferent`` (ad_vars/ad_offs/ad_mask): one row per alldifferent,
+  filtered with Hall-interval bounds(Z) consistency;
+* ``Cumulative``  (cu_svar/cu_dur/cu_dem/cu_cap): one row per cumulative,
+  filtered with time-table (compulsory-part) reasoning.
+
+Each bank gets its own variable-centric occurrence tables so every kind
+joins into the store by pure gathers (TPU-native, no atomics); each bank
+carries one trailing neutral dummy row that occurrence padding points at.
+
+For the linear bank, two dual views of the same program are produced:
 
 * **propagator-centric** (`vidx/coef/rhs/bidx`): one row per propagator —
   this is what a CUDA thread would execute; used by the scatter oracle
@@ -64,6 +73,19 @@ class CompiledModel:
     # variable-centric occurrence tables (padding points at dummy row, slot 0)
     occ_prop: jax.Array     # i[V, D]
     occ_slot: jax.Array     # i[V, D]  in [0, K]; K == reif-entailment slot
+    # alldifferent bank (row A is the neutral dummy; DESIGN.md §12)
+    ad_vars: jax.Array      # i[A+1, N]  member var index (0 for padding)
+    ad_offs: jax.Array      # i[A+1, N]  member offset (x_i + off_i distinct)
+    ad_mask: jax.Array      # i[A+1, N]  1 = real member, 0 = padding
+    ad_occ_inst: jax.Array  # i[V, Dad]  alldiff row per occurrence
+    ad_occ_pos: jax.Array   # i[V, Dad]  member position per occurrence
+    # cumulative bank (row C is the neutral dummy)
+    cu_svar: jax.Array      # i[C+1, T]  start var per task (0 for padding)
+    cu_dur: jax.Array       # i[C+1, T]  duration (0 for padding)
+    cu_dem: jax.Array       # i[C+1, T]  demand   (0 for padding)
+    cu_cap: jax.Array       # i[C+1]     capacity
+    cu_occ_inst: jax.Array  # i[V, Dcu]
+    cu_occ_pos: jax.Array   # i[V, Dcu]
     # search
     branch_vars: jax.Array  # i[B] decision vars in branching order
     # static metadata
@@ -71,6 +93,13 @@ class CompiledModel:
     n_props: int = dataclasses.field(metadata=dict(static=True))
     k_terms: int = dataclasses.field(metadata=dict(static=True))
     d_occ: int = dataclasses.field(metadata=dict(static=True))
+    n_alldiff: int = dataclasses.field(metadata=dict(static=True))
+    ad_width: int = dataclasses.field(metadata=dict(static=True))
+    ad_docc: int = dataclasses.field(metadata=dict(static=True))
+    n_cumulative: int = dataclasses.field(metadata=dict(static=True))
+    cu_width: int = dataclasses.field(metadata=dict(static=True))
+    cu_docc: int = dataclasses.field(metadata=dict(static=True))
+    horizon: int = dataclasses.field(metadata=dict(static=True))
     obj_var: int = dataclasses.field(metadata=dict(static=True))  # -1 if satisfaction
     dtype: str = dataclasses.field(metadata=dict(static=True))
     name: str = dataclasses.field(metadata=dict(static=True))
@@ -79,20 +108,27 @@ class CompiledModel:
     def jdtype(self):
         return np.dtype(self.dtype)
 
+    @property
+    def total_props(self) -> int:
+        """Propagator-table rows across all kinds (dummies excluded) —
+        the count the §12 bench/regression guards compare."""
+        return self.n_props + self.n_alldiff + self.n_cumulative
+
 
 def compile_model(
     m: Model,
     pad_terms_to: int = 8,
     pad_occ_to: int = 8,
+    pad_horizon_to: int = 32,
     force_dtype: str | None = None,
 ) -> CompiledModel:
     V = m.n_vars
     props: List[ReifLinLe] = m.props
     P = len(props)
-    if P == 0:
+    if P == 0 and not (m.alldiffs or m.cumulatives):
         raise ValueError("model has no constraints")
 
-    K = max(len(p.lin.terms) for p in props)
+    K = max((len(p.lin.terms) for p in props), default=1)
     K = max(_round_up(K, pad_terms_to), pad_terms_to)
 
     lb0 = np.asarray(m.lb0, dtype=np.int64)
@@ -133,13 +169,86 @@ def compile_model(
             occ_prop[v, d] = p
             occ_slot[v, d] = k
 
+    # ---- alldifferent bank (DESIGN.md §12) -----------------------------
+    A = len(m.alldiffs)
+    N = max((len(ad.vars) for ad in m.alldiffs), default=2)
+    N = max(_round_up(N, 4), 2) if A else 2
+    ad_vars = np.zeros((A + 1, N), dtype=np.int64)
+    ad_offs = np.zeros((A + 1, N), dtype=np.int64)
+    ad_mask = np.zeros((A + 1, N), dtype=np.int64)
+    ad_occs: List[List[Tuple[int, int]]] = [[] for _ in range(V)]
+    for a, ad in enumerate(m.alldiffs):
+        for n, (v, off) in enumerate(zip(ad.vars, ad.offsets)):
+            ad_vars[a, n] = v
+            ad_offs[a, n] = off
+            ad_mask[a, n] = 1
+            ad_occs[v].append((a, n))
+    Dad = max(max((len(o) for o in ad_occs), default=1), 1)
+    Dad = _round_up(Dad, 4) if A else 1
+    ad_occ_inst = np.full((V, Dad), A, dtype=np.int64)   # pad -> dummy row
+    ad_occ_pos = np.zeros((V, Dad), dtype=np.int64)
+    for v, o in enumerate(ad_occs):
+        for d, (a, n) in enumerate(o):
+            ad_occ_inst[v, d] = a
+            ad_occ_pos[v, d] = n
+
+    # ---- cumulative bank (DESIGN.md §12) -------------------------------
+    C = len(m.cumulatives)
+    T = max((len(cu.starts) for cu in m.cumulatives), default=2)
+    T = max(_round_up(T, 4), 2) if C else 2
+    cu_svar = np.zeros((C + 1, T), dtype=np.int64)
+    cu_dur = np.zeros((C + 1, T), dtype=np.int64)
+    cu_dem = np.zeros((C + 1, T), dtype=np.int64)
+    cu_cap = np.zeros((C + 1,), dtype=np.int64)
+    cu_occs: List[List[Tuple[int, int]]] = [[] for _ in range(V)]
+    horizon = 1
+    for c, cu in enumerate(m.cumulatives):
+        cu_cap[c] = cu.capacity
+        for t, (v, d_, r_) in enumerate(zip(cu.starts, cu.durations,
+                                            cu.demands)):
+            cu_svar[c, t] = v
+            cu_dur[c, t] = d_
+            cu_dem[c, t] = r_
+            if d_ > 0 and r_ > 0:
+                if int(lb0[v]) < 0:
+                    # the time-table grid is [0, horizon); a negative
+                    # feasible start would be silently pruned (wrong
+                    # UNSAT) — demand a shifted model instead
+                    raise ValueError(
+                        f"cumulative start var {v} has negative domain "
+                        f"({int(lb0[v])}, {int(ub0[v])}); native time-table "
+                        "filtering needs nonnegative starts — shift the "
+                        "model (or use decompose=True)")
+                # only effective tasks are ever tightened by the row
+                cu_occs[v].append((c, t))
+                horizon = max(horizon, int(ub0[v]) + d_ + 2)
+    Dcu = max(max((len(o) for o in cu_occs), default=1), 1)
+    Dcu = _round_up(Dcu, 4) if C else 1
+    # bucket the (static, trace-shaping) time grid so same-family
+    # instances across seeds keep one shape signature (api.py cache /
+    # solve_many; same spirit as the pool pow2 buckets, DESIGN.md §11)
+    if C:
+        horizon = _round_up(horizon, pad_horizon_to)
+    cu_occ_inst = np.full((V, Dcu), C, dtype=np.int64)   # pad -> dummy row
+    cu_occ_pos = np.zeros((V, Dcu), dtype=np.int64)
+    for v, o in enumerate(cu_occs):
+        for d, (c, t) in enumerate(o):
+            cu_occ_inst[v, d] = c
+            cu_occ_pos[v, d] = t
+
     # ---- dtype selection with overflow headroom ------------------------
     absmax = np.maximum(np.abs(lb0), np.abs(ub0)) + 1           # per var
-    per_prop_sum = np.abs(coef[:P]) @ np.ones((K,), np.int64)   # not used alone
     worst = int((np.abs(coef[:P]) * absmax[vidx[:P]]).sum(axis=1).max()) \
         if P else 0
     worst = max(worst, int(np.abs(rhs[:P]).max()) if P else 0)
-    del per_prop_sum
+    # native banks: shifted alldiff values x+off (±1 Hall push), cumulative
+    # time points up to `horizon` and per-row demand sums
+    if A:
+        worst = max(worst, int((absmax[ad_vars[:A]] + np.abs(ad_offs[:A])
+                                ).max()) + 2)
+    if C:
+        worst = max(worst, horizon + 2,
+                    int(cu_dem[:C].sum(axis=1).max()), int(cu_cap[:C].max()))
     if force_dtype is not None:
         dtype = force_dtype
     elif worst * 4 < np.iinfo(np.int32).max:
@@ -165,8 +274,15 @@ def compile_model(
         box_lo=cast(lb0 - 1), box_hi=cast(ub0 + 1),
         vidx=cast(vidx), coef=cast(coef), rhs=cast(rhs), bidx=cast(bidx),
         occ_prop=cast(occ_prop), occ_slot=cast(occ_slot),
+        ad_vars=cast(ad_vars), ad_offs=cast(ad_offs), ad_mask=cast(ad_mask),
+        ad_occ_inst=cast(ad_occ_inst), ad_occ_pos=cast(ad_occ_pos),
+        cu_svar=cast(cu_svar), cu_dur=cast(cu_dur), cu_dem=cast(cu_dem),
+        cu_cap=cast(cu_cap),
+        cu_occ_inst=cast(cu_occ_inst), cu_occ_pos=cast(cu_occ_pos),
         branch_vars=cast(np.asarray(branch)),
         n_vars=V, n_props=P, k_terms=K, d_occ=D,
+        n_alldiff=A, ad_width=N, ad_docc=Dad,
+        n_cumulative=C, cu_width=T, cu_docc=Dcu, horizon=horizon,
         obj_var=(m.objective if m.objective is not None else -1),
         dtype=dtype, name=m.name,
     )

@@ -27,12 +27,17 @@ Propagator semantics for row  b ⇔ Σ_j a_j·x_j ≤ c :
 Candidates are clamped into the initial box (see compile.py) so all
 arithmetic provably stays in dtype range.
 
-There is exactly **one** implementation of the propagator semantics:
-`candidates_tile` / `sweep_tile`, written over raw tables and lane-batched
-``[L, V]`` stores.  Everything else — the single-store `sweep`, the
-scatter oracle, the lane-batched `fixpoint_batch` used by the search
-superstep, and the Pallas VMEM kernel (`kernels/fixpoint_kernel.py`
-imports `sweep_tile`) — is a thin wrapper around it (DESIGN.md §2.3).
+There is exactly **one** implementation of the propagator semantics per
+*kind* (the typed propagator table, DESIGN.md §12): `candidates_tile`
+(ReifLinLe), `alldiff_candidates_tile` (Hall-interval bounds(Z)
+consistency) and `cumulative_candidates_tile` (time-table filtering),
+all written over raw tables and lane-batched ``[L, V]`` stores and
+dispatched by `sweep_tile` in a fixed kind order.  Everything else — the
+single-store `sweep`, the scatter oracle, the lane-batched
+`fixpoint_batch` used by the search superstep, and the Pallas VMEM
+kernel (`kernels/fixpoint_kernel.py` imports `sweep_tile`) — is a thin
+wrapper around these tiles (DESIGN.md §2.3), so all three backends run
+the same kind semantics verbatim and stay bit-identical.
 """
 
 from __future__ import annotations
@@ -45,6 +50,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.compile import CompiledModel
+from repro.core.model import TRUE_VAR
 
 
 def _neutrals(dtype):
@@ -113,24 +119,170 @@ def candidates_tile(lb: jax.Array, ub: jax.Array, vidx, coef, rhs, bidx
     return cand_lb, cand_ub
 
 
+def alldiff_candidates_tile(lb, ub, ad_vars, ad_offs, ad_mask
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Bounds(Z)-consistency tells for the AllDifferent bank
+    (kind-dispatched sweep variant, DESIGN.md §12).
+
+    Pure-array form over a ``[L, V]`` tile; shared verbatim by all three
+    backends.  Hall-interval reasoning on the shifted views
+    ``y_k = x_k + off_k``: for every endpoint pair (i, j) the interval
+    ``I = [yl_i, yu_j]`` is tested —
+
+      |{k : dom(y_k) ⊆ I}| > |I|  →  fail (some member pushed past its
+                                     box, which crosses its bounds);
+      |{k : dom(y_k) ⊆ I}| = |I|  →  I is a Hall interval: every other
+                                     member's bound inside I is pushed
+                                     out (lb → sup I + 1, ub → inf I - 1).
+
+    Iterated to fixpoint this is exactly bounds(Z) consistency (all
+    candidate Hall intervals have lb endpoints as infima and ub endpoints
+    as suprema).  Returns (cand_lb, cand_ub), each ``[L, A1, N]``, in
+    *unshifted* variable space; padded members and the dummy row A are
+    neutral.
+    """
+    dt = lb.dtype
+    neu_ub, neu_lb = _neutrals(dt)
+    msk = (ad_mask[None] != 0)                              # [1, A1, N]
+    off = ad_offs[None]
+    yl = jnp.take(lb, ad_vars, axis=1) + off                # [L, A1, N]
+    yu = jnp.take(ub, ad_vars, axis=1) + off
+    a = yl[:, :, :, None]                    # interval inf from i  [L,A1,N,1]
+    b = yu[:, :, None, :]                    # interval sup from j  [L,A1,1,N]
+    pair_ok = msk[:, :, :, None] & msk[:, :, None, :] & (a <= b)
+    inside = (msk[:, :, None, None, :]
+              & (yl[:, :, None, None, :] >= a[..., None])
+              & (yu[:, :, None, None, :] <= b[..., None]))  # [L,A1,N,N,N]
+    cnt = inside.sum(-1).astype(dt)                         # [L, A1, N, N]
+    width = b - a + 1
+    overflow = pair_ok & (cnt > width)
+    hall = pair_ok & (cnt == width)
+
+    # Hall pruning: member k outside I with a bound inside I is pushed out
+    out_k = msk[:, :, None, None, :] & ~inside
+    a5, b5 = a[..., None], b[..., None]
+    klb, kub = yl[:, :, None, None, :], yu[:, :, None, None, :]
+    push = hall[..., None]
+    lb_cand = jnp.where(push & out_k & (klb >= a5) & (klb <= b5),
+                        b5 + 1, neu_lb)                     # [L,A1,N,N,N]
+    ub_cand = jnp.where(push & out_k & (kub >= a5) & (kub <= b5),
+                        a5 - 1, neu_ub)
+    cand_lb = lb_cand.max(axis=(2, 3))                      # [L, A1, N]
+    cand_ub = ub_cand.min(axis=(2, 3))
+
+    # pigeonhole overflow: the row is unsatisfiable — fail every member
+    # (lb pushed to +big; the box clamp keeps it at box_hi, crossing ub)
+    fail = overflow.any(axis=(2, 3))                        # [L, A1]
+    cand_lb = jnp.where(fail[:, :, None] & msk, -neu_lb, cand_lb)
+    # back to unshifted variable space (neutrals stay effectively neutral)
+    return cand_lb - off, cand_ub - off
+
+
+def cumulative_candidates_tile(lb, ub, cu_svar, cu_dur, cu_dem, cu_cap,
+                               horizon: int
+                               ) -> Tuple[jax.Array, jax.Array]:
+    """Time-table tells for the Cumulative bank (kind-dispatched sweep
+    variant, DESIGN.md §12).
+
+    Pure-array form over a ``[L, V]`` tile; shared verbatim by all three
+    backends.  Classic compulsory-part reasoning on the dense time grid
+    ``t ∈ [0, horizon)`` (horizon is a compile-time static):
+
+      * task t's compulsory part is ``[lst_t, est_t + d_t)`` (nonempty
+        iff lst_t < est_t + d_t);
+      * profile(τ) = Σ demands of compulsory parts covering τ;
+        profile(τ) > cap → fail the row;
+      * task t cannot *start* at s if some τ ∈ [s, s+d_t) has
+        profile₋t(τ) + r_t > cap; its lb (ub) moves to the first (last)
+        feasible start ≥ est_t (≤ lst_t).
+
+    Returns (cand_lb, cand_ub), each ``[L, C1, T]``; zero-duration /
+    zero-demand tasks and the dummy row C are neutral.  Monotone: shrink
+    the domains and compulsory parts only grow, so feasible starts only
+    shrink (a propagator in the paper's Lemma-1 sense).
+    """
+    dt = lb.dtype
+    neu_ub, neu_lb = _neutrals(dt)
+    est = jnp.take(lb, cu_svar, axis=1)                     # [L, C1, T]
+    lst = jnp.take(ub, cu_svar, axis=1)
+    d = cu_dur[None]
+    q = cu_dem[None]
+    act = (d > 0) & (q > 0)
+    cap = cu_cap[None, :, None]                             # [1, C1, 1]
+    tgrid = jnp.arange(horizon, dtype=dt)                   # [H]
+    run = (act[..., None] & (lst[..., None] <= tgrid)
+           & (tgrid < (est + d)[..., None]))                # [L, C1, T, H]
+    contrib = jnp.where(run, q[..., None], jnp.asarray(0, dt))
+    profile = contrib.sum(axis=2)                           # [L, C1, H]
+    overload = (profile > cap).any(-1)                      # [L, C1]
+
+    # per-task residual profile and forbidden time points
+    bad = (act[..., None]
+           & (profile[:, :, None, :] - contrib + q[..., None] > cap[..., None]))
+    csum = jnp.cumsum(bad.astype(dt), axis=-1)
+    csum = jnp.concatenate(
+        [jnp.zeros_like(csum[..., :1]), csum], axis=-1)     # [L, C1, T, H+1]
+    ends = jnp.clip(tgrid[None, None, None, :] + d[..., None], 0, horizon)
+    wbad = (jnp.take_along_axis(csum, ends.astype(jnp.int32), axis=-1)
+            - csum[..., :-1])                               # [L, C1, T, H]
+    feas = wbad == 0                                        # start grid feas.
+
+    cand_lb = jnp.where(feas & (tgrid >= est[..., None]), tgrid,
+                        -neu_lb).min(-1)                    # first feasible
+    cand_ub = jnp.where(feas & (tgrid <= lst[..., None]), tgrid,
+                        -neu_ub).max(-1)                    # last feasible
+    cand_lb = jnp.where(act, cand_lb, neu_lb)
+    cand_ub = jnp.where(act, cand_ub, neu_ub)
+    # overload: fail every effective task of the row
+    cand_lb = jnp.where(overload[:, :, None] & act, -neu_lb, cand_lb)
+    return cand_lb, cand_ub
+
+
+def _gather_join(cand_lb, cand_ub, occ_inst, occ_pos, L):
+    """Variable-centric join of one bank's candidates: each var reduces
+    over its occurrence list (pure gather — no scatter, no atomics)."""
+    width = cand_ub.shape[2]
+    flat_ub = cand_ub.reshape(L, -1)
+    flat_lb = cand_lb.reshape(L, -1)
+    occ = (occ_inst * width + occ_pos).reshape(-1)          # [V*D]
+    V, D = occ_inst.shape
+    g_ub = jnp.take(flat_ub, occ, axis=1).reshape(L, V, D).min(-1)
+    g_lb = jnp.take(flat_lb, occ, axis=1).reshape(L, V, D).max(-1)
+    return g_lb, g_ub
+
+
 def sweep_tile(lb, ub, vidx, coef, rhs, bidx, occ_prop, occ_slot,
-               box_lo, box_hi) -> Tuple[jax.Array, jax.Array]:
-    """One eventless sweep over a ``[L, V]`` tile of stores (gather form).
+               ad_vars, ad_offs, ad_mask, ad_occ_inst, ad_occ_pos,
+               cu_svar, cu_dur, cu_dem, cu_cap, cu_occ_inst, cu_occ_pos,
+               box_lo, box_hi, *, horizon: int, n_alldiff: int = 0,
+               n_cumulative: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """One eventless sweep over a ``[L, V]`` tile of stores (gather form),
+    dispatching over the typed propagator banks (DESIGN.md §12).
 
     Pure-array form shared verbatim by the XLA backends and the Pallas
     kernel body — the single source of truth for the sweep semantics.
-    Variable v reduces over its occurrence list — no scatter, no atomics,
-    deterministic by construction.
+    Every bank computes its candidate tells, every variable reduces over
+    its per-bank occurrence lists, and the joins compose by min/max —
+    associativity/commutativity of ⊔ makes the kind order irrelevant to
+    the result.  ``n_alldiff``/``n_cumulative`` are compile-time statics
+    so models without a bank skip its (dummy-only) work entirely.
     """
+    L = lb.shape[0]
     cand_lb, cand_ub = candidates_tile(lb, ub, vidx, coef, rhs, bidx)
-    # variable-centric join: gather each var's occurrence candidates
-    k1 = cand_ub.shape[2]
-    flat_ub = cand_ub.reshape(cand_ub.shape[0], -1)       # [L, P1*(K+1)]
-    flat_lb = cand_lb.reshape(cand_lb.shape[0], -1)
-    occ = (occ_prop * k1 + occ_slot).reshape(-1)          # [V*D]
-    V, D = occ_prop.shape
-    g_ub = jnp.take(flat_ub, occ, axis=1).reshape(lb.shape[0], V, D).min(-1)
-    g_lb = jnp.take(flat_lb, occ, axis=1).reshape(lb.shape[0], V, D).max(-1)
+    # fold the reif-entailment slot in: occ_slot ∈ [0, K] indexes [K+1]
+    g_lb, g_ub = _gather_join(cand_lb, cand_ub, occ_prop, occ_slot, L)
+    if n_alldiff:
+        ad_lb, ad_ub = alldiff_candidates_tile(lb, ub, ad_vars, ad_offs,
+                                               ad_mask)
+        j_lb, j_ub = _gather_join(ad_lb, ad_ub, ad_occ_inst, ad_occ_pos, L)
+        g_lb = jnp.maximum(g_lb, j_lb)
+        g_ub = jnp.minimum(g_ub, j_ub)
+    if n_cumulative:
+        cu_lb, cu_ub = cumulative_candidates_tile(
+            lb, ub, cu_svar, cu_dur, cu_dem, cu_cap, horizon)
+        j_lb, j_ub = _gather_join(cu_lb, cu_ub, cu_occ_inst, cu_occ_pos, L)
+        g_lb = jnp.maximum(g_lb, j_lb)
+        g_ub = jnp.minimum(g_ub, j_ub)
     # clamp candidates into the initial box (overflow guard; sound because
     # box_lo-1/box_hi+1 still cross the opposite bound on failure)
     g_ub = jnp.maximum(g_ub, box_lo[None, :])
@@ -138,12 +290,28 @@ def sweep_tile(lb, ub, vidx, coef, rhs, bidx, occ_prop, occ_slot,
     return jnp.maximum(lb, g_lb), jnp.minimum(ub, g_ub)
 
 
+def model_tables(cm: CompiledModel) -> Tuple:
+    """The positional table args of `sweep_tile`, in order — the ONE
+    place the (backend-shared) sweep signature is spelled out."""
+    return (cm.vidx, cm.coef, cm.rhs, cm.bidx, cm.occ_prop, cm.occ_slot,
+            cm.ad_vars, cm.ad_offs, cm.ad_mask, cm.ad_occ_inst,
+            cm.ad_occ_pos, cm.cu_svar, cm.cu_dur, cm.cu_dem, cm.cu_cap,
+            cm.cu_occ_inst, cm.cu_occ_pos, cm.box_lo, cm.box_hi)
+
+
+def model_statics(cm: CompiledModel) -> dict:
+    """The static (kind-dispatch) kwargs of `sweep_tile`."""
+    return dict(horizon=cm.horizon, n_alldiff=cm.n_alldiff,
+                n_cumulative=cm.n_cumulative)
+
+
 def propagator_candidates(cm: CompiledModel, lb: jax.Array, ub: jax.Array
                           ) -> Tuple[jax.Array, jax.Array]:
     """Single-store view of `candidates_tile` (each ``[P+1, K+1]``).
 
-    Kept as the entry point for the scatter forms and the sequential
-    SELECT-rule semantics.
+    Kept as the entry point for the linear scatter form and the
+    sequential SELECT-rule semantics (which are defined on the ReifLinLe
+    bank; the native banks have their own tiles).
     """
     cand_lb, cand_ub = candidates_tile(lb[None], ub[None], cm.vidx, cm.coef,
                                        cm.rhs, cm.bidx)
@@ -153,9 +321,8 @@ def propagator_candidates(cm: CompiledModel, lb: jax.Array, ub: jax.Array
 def sweep(cm: CompiledModel, lb: jax.Array, ub: jax.Array
           ) -> Tuple[jax.Array, jax.Array]:
     """One parallel iteration: D(P₁) ⊔ … ⊔ D(Pₙ) applied to one (lb, ub)."""
-    nlb, nub = sweep_tile(lb[None], ub[None], cm.vidx, cm.coef, cm.rhs,
-                          cm.bidx, cm.occ_prop, cm.occ_slot,
-                          cm.box_lo, cm.box_hi)
+    nlb, nub = sweep_tile(lb[None], ub[None], *model_tables(cm),
+                          **model_statics(cm))
     return nlb[0], nub[0]
 
 
@@ -163,8 +330,7 @@ def sweep_batch(cm: CompiledModel, lb: jax.Array, ub: jax.Array
                 ) -> Tuple[jax.Array, jax.Array]:
     """Gather sweep over lane-batched ``[L, V]`` stores — one tensor op for
     the whole batch (the TURBO shape: every lane's sweep in one launch)."""
-    return sweep_tile(lb, ub, cm.vidx, cm.coef, cm.rhs, cm.bidx,
-                      cm.occ_prop, cm.occ_slot, cm.box_lo, cm.box_hi)
+    return sweep_tile(lb, ub, *model_tables(cm), **model_statics(cm))
 
 
 def sweep_scatter(cm: CompiledModel, lb: jax.Array, ub: jax.Array
@@ -175,13 +341,44 @@ def sweep_scatter(cm: CompiledModel, lb: jax.Array, ub: jax.Array
     atomic join" — the paper's load/store formulation — except the joins
     are XLA scatter-min/max, which are deterministic regardless of
     duplicate indices (associative reduce).  Used as the reference the
-    gather sweep and the Pallas kernel are tested against.
+    gather sweep and the Pallas kernel are tested against.  The native
+    banks reuse the *same* kind tiles as the gather form (DESIGN.md §12)
+    and only differ in join strategy: per-row scatter instead of per-var
+    occurrence gather — equal results by associativity of ⊔.
     """
     cand_lb, cand_ub = propagator_candidates(cm, lb, ub)
+    # plain rows (b == TRUE) must not scatter their (dis)entailment slot:
+    # the gather form has no TRUE-var occurrence for it (compile.py), and
+    # a disentailed plain row always fails through term tightening in the
+    # same sweep — neutralizing here keeps both forms bit-identical per
+    # sweep, not just at the fixpoint (test_backend_parity_capped_iters)
+    neu_ub, neu_lb = _neutrals(lb.dtype)
+    plain = cm.bidx == TRUE_VAR
+    cand_ub = cand_ub.at[:, -1].set(
+        jnp.where(plain, neu_ub, cand_ub[:, -1]))
+    cand_lb = cand_lb.at[:, -1].set(
+        jnp.where(plain, neu_lb, cand_lb[:, -1]))
     tgt = jnp.concatenate([cm.vidx, cm.bidx[:, None]], axis=1)  # [P1, K+1]
     flat_v = tgt.reshape(-1)
     new_ub = ub.at[flat_v].min(jnp.maximum(cand_ub.reshape(-1), cm.box_lo[flat_v]))
     new_lb = lb.at[flat_v].max(jnp.minimum(cand_lb.reshape(-1), cm.box_hi[flat_v]))
+    if cm.n_alldiff:
+        ad_lb, ad_ub = alldiff_candidates_tile(
+            lb[None], ub[None], cm.ad_vars, cm.ad_offs, cm.ad_mask)
+        v = cm.ad_vars.reshape(-1)
+        new_ub = new_ub.at[v].min(
+            jnp.maximum(ad_ub[0].reshape(-1), cm.box_lo[v]))
+        new_lb = new_lb.at[v].max(
+            jnp.minimum(ad_lb[0].reshape(-1), cm.box_hi[v]))
+    if cm.n_cumulative:
+        cu_lb, cu_ub = cumulative_candidates_tile(
+            lb[None], ub[None], cm.cu_svar, cm.cu_dur, cm.cu_dem,
+            cm.cu_cap, cm.horizon)
+        v = cm.cu_svar.reshape(-1)
+        new_ub = new_ub.at[v].min(
+            jnp.maximum(cu_ub[0].reshape(-1), cm.box_lo[v]))
+        new_lb = new_lb.at[v].max(
+            jnp.minimum(cu_lb[0].reshape(-1), cm.box_hi[v]))
     return new_lb, new_ub
 
 

@@ -152,10 +152,35 @@ class LinLe:
 
 @dataclasses.dataclass(frozen=True)
 class ReifLinLe:
-    """b ⇔ (Σ a_j x_j ≤ c).  The single propagator shape of the engine."""
+    """b ⇔ (Σ a_j x_j ≤ c).  The linear propagator shape of the engine."""
 
     bvar: int
     lin: LinLe
+
+
+@dataclasses.dataclass(frozen=True)
+class AllDifferent:
+    """alldifferent(x_i + off_i) — native typed propagator (DESIGN.md §12).
+
+    Bounds(Z)-consistent filtering via Hall intervals in the engine; one
+    table row replaces the O(n²) reified-disequality decomposition."""
+
+    vars: Tuple[int, ...]
+    offsets: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Cumulative:
+    """cumulative(s, d, r, c) — native typed propagator (DESIGN.md §12).
+
+    Time-table filtering from compulsory parts in the engine; one table
+    row replaces the O(n²) overlap-boolean decomposition (and, with
+    capacity 1, the job-shop disjunctive pair encoding)."""
+
+    starts: Tuple[int, ...]
+    durations: Tuple[int, ...]
+    demands: Tuple[int, ...]
+    capacity: int
 
 
 class Model:
@@ -168,6 +193,8 @@ class Model:
         self.ub0: List[int] = []
         self.names: List[str] = []
         self.props: List[ReifLinLe] = []
+        self.alldiffs: List[AllDifferent] = []
+        self.cumulatives: List[Cumulative] = []
         self.objective: Optional[int] = None      # var index to minimize
         self.branch_order: List[int] = []         # decision vars, in order
         # var 0 == constant true
@@ -232,6 +259,79 @@ class Model:
         lt = self.reify(ea < eb, "neq_lt")
         gt = self.reify(ea > eb, "neq_gt")
         self.add(lt + gt >= 1)
+
+    # -- typed global constraints (native propagator table, DESIGN.md §12)
+
+    @property
+    def n_constraints(self) -> int:
+        """Total propagator-table rows across all kinds."""
+        return len(self.props) + len(self.alldiffs) + len(self.cumulatives)
+
+    def alldifferent(self, xs: Sequence[IntVar],
+                     offsets: Optional[Sequence[int]] = None,
+                     decompose: bool = False) -> None:
+        """alldifferent(x_i + off_i).
+
+        Default: ONE native `AllDifferent` table row (bounds(Z)-consistent
+        Hall-interval filtering in the fixpoint engine).  With
+        ``decompose=True`` the pre-§12 lowering is emitted instead — the
+        pairwise reified-disequality blowup (3·n·(n-1)/2 `ReifLinLe` rows
+        + n·(n-1) fresh booleans) — kept as the parity oracle
+        (tests/test_propagators.py).
+        """
+        offs = [0] * len(xs) if offsets is None else [int(o) for o in offsets]
+        if len(offs) != len(xs):
+            raise ValueError(f"alldifferent: {len(xs)} vars but "
+                             f"{len(offs)} offsets")
+        if len(xs) < 2:
+            return
+        if decompose:
+            for i in range(len(xs)):
+                for j in range(i + 1, len(xs)):
+                    self.neq(xs[i] + offs[i], xs[j] + offs[j])
+            return
+        self.alldiffs.append(AllDifferent(tuple(x.idx for x in xs),
+                                          tuple(offs)))
+
+    def cumulative(self, starts: Sequence[IntVar],
+                   durations: Sequence[int], demands: Sequence[int],
+                   capacity: int, decompose: bool = False) -> None:
+        """cumulative(s, d, r, c): at every time t,
+        Σ_{i : s_i ≤ t < s_i + d_i} r_i ≤ c.
+
+        Default: ONE native `Cumulative` table row (time-table filtering
+        from compulsory parts).  With ``decompose=True`` the pre-§12
+        lowering is emitted instead — the paper's overlap-boolean
+        decomposition (Schutt et al. 2009): b_ij ⇔ (s_i ≤ s_j ∧
+        s_j ≤ s_i + d_i - 1) plus one capacity row per task — kept as
+        the parity oracle.  Capacity 1 is the job-shop disjunctive case.
+        """
+        n = len(starts)
+        d = [int(x) for x in durations]
+        r = [int(x) for x in demands]
+        if not (len(d) == len(r) == n):
+            raise ValueError("cumulative: length mismatch")
+        if not decompose:
+            self.cumulatives.append(Cumulative(
+                tuple(s.idx for s in starts), tuple(d), tuple(r),
+                int(capacity)))
+            return
+        b = [[None] * n for _ in range(n)]
+        for i in range(n):
+            for j in range(n):
+                bij = self.bool_var(f"cu{len(self.cumulatives)}_b{i}_{j}")
+                b[i][j] = bij
+                if d[i] == 0:
+                    self.add(bij <= 0)     # zero-duration: never overlaps
+                    continue
+                self.iff_and(bij, [starts[i] - starts[j] <= 0,
+                                   starts[j] - starts[i] <= d[i] - 1])
+        for j in range(n):
+            terms = [(r[i], b[i][j]) for i in range(n) if r[i] > 0]
+            if not terms:
+                continue
+            expr = sum((coef * var for coef, var in terms), start=0)
+            self.add(expr <= int(capacity))
 
     def iff_and(self, b: IntVar, lins: Sequence[LinLe]) -> None:
         """⟦b ⇔ (φ₁ ∧ ... ∧ φ_m)⟧ via the standard decomposition

@@ -1,9 +1,12 @@
-"""Graph coloring — chromatic-number search, lowered to ReifLinLe
-(DESIGN.md §10).
+"""Graph coloring — chromatic-number search (DESIGN.md §10, §12).
 
-Color variable `c_i` per vertex, `c_i ≠ c_j` per edge (the paper's
-reified-disjunction encoding via `Model.neq`), and a `cmax` variable with
-`c_i ≤ cmax` minimized by branch & bound — the optimum is χ(G) - 1.
+Color variable `c_i` per vertex, `c_i ≠ c_j` per edge, and a `cmax`
+variable with `c_i ≤ cmax` minimized by branch & bound — the optimum is
+χ(G) - 1.  Since §12 each edge lowers to ONE native two-member
+`AllDifferent` row (1 table row per edge instead of the 3 `ReifLinLe`
+rows + 2 fresh booleans of the reified-disjunction `Model.neq`
+decomposition, which ``build_model(inst, decompose=True)`` still emits
+as the parity oracle).
 
 Value-symmetry breaking: vertex i's domain is `(0, min(i, n-1))` — any
 coloring can be relabeled so colors appear in first-use order, so
@@ -39,13 +42,16 @@ def generate(n: int, seed: int = 0, edge_prob: float = 0.5) -> Coloring:
                     name=f"coloring-n{n}-p{edge_prob}-s{seed}")
 
 
-def build_model(inst: Coloring) -> Tuple[Model, dict]:
+def build_model(inst: Coloring, decompose: bool = False) -> Tuple[Model, dict]:
     n = inst.n
     m = Model(name=inst.name)
     c = [m.int_var(0, min(i, n - 1), f"c{i}") for i in range(n)]
     cmax = m.int_var(0, n - 1, "cmax")
     for (i, j) in inst.edges:
-        m.neq(c[i], c[j])
+        if decompose:
+            m.neq(c[i], c[j])
+        else:
+            m.alldifferent([c[i], c[j]])
     for i in range(n):
         m.add(c[i] <= cmax)
     m.minimize(cmax)

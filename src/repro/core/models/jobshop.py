@@ -1,18 +1,19 @@
-"""Job-shop scheduling — disjunctive machines, lowered to ReifLinLe
-(DESIGN.md §10).
+"""Job-shop scheduling — disjunctive machines (DESIGN.md §10, §12).
 
 Each job is a fixed sequence of operations, one per machine, with
 durations; operations of different jobs on the same machine must not
 overlap.  Start variable `s_{j,k}` per operation:
 
     within-job precedence:  s_{j,k} + d_{j,k} ≤ s_{j,k+1}        (plain)
-    machine disjunction:    b ⇔ (end_a ≤ start_b)  ∥
-                            b' ⇔ (end_b ≤ start_a) ∥  b + b' ≥ 1  (reified)
+    machine exclusivity:    cumulative(ops on machine, dem 1, cap 1)
     makespan:               s_{j,last} + d ≤ mk,  minimize mk
 
-The disjunction is the same before/after encoding the quickstart example
-uses; RCPSP's overlap booleans generalize it to cumulative resources —
-job-shop is the unit-capacity member of the family.
+Since §12 each machine lowers to ONE native unit-capacity `Cumulative`
+row (time-table filtering — the disjunctive case).  ``build_model(inst,
+decompose=True)`` emits the pre-§12 lowering instead: the pairwise
+before/after reified disjunction b ⇔ (end_a ≤ start_b) ∥ b' ⇔ (end_b ≤
+start_a) ∥ b + b' ≥ 1 per op pair — kept as the parity oracle.  RCPSP's
+cumulative generalizes this to capacities > 1.
 
 `generate(n_jobs, n_machines, seed)` samples a square-ish Taillard-style
 instance: each job visits every machine once in a random order.
@@ -57,7 +58,7 @@ def generate(n_jobs: int, n_machines: int = 2, seed: int = 0,
                    name=f"jobshop-j{n_jobs}-m{n_machines}-s{seed}")
 
 
-def build_model(inst: JobShop) -> Tuple[Model, dict]:
+def build_model(inst: JobShop, decompose: bool = False) -> Tuple[Model, dict]:
     J, M = inst.n_jobs, inst.n_machines
     h = inst.horizon
     d = inst.durations
@@ -70,10 +71,16 @@ def build_model(inst: JobShop) -> Tuple[Model, dict]:
             m.add(s[j][k] + int(d[j, k]) <= s[j][k + 1])
         m.add(s[j][M - 1] + int(d[j, M - 1]) <= mk)
 
-    # per-machine disjunctions between operations of different jobs
+    # per-machine exclusivity between operations of different jobs
     for mach in range(M):
         ops = [(j, int(np.where(inst.machines[j] == mach)[0][0]))
                for j in range(J)]
+        if not decompose:
+            # one native unit-capacity cumulative row per machine (§12)
+            m.cumulative([s[j][k] for j, k in ops],
+                         [int(d[j, k]) for j, k in ops],
+                         [1] * len(ops), 1)
+            continue
         for a in range(len(ops)):
             for b in range(a + 1, len(ops)):
                 (ja, ka), (jb, kb) = ops[a], ops[b]

@@ -1,14 +1,17 @@
-"""N-queens — the classic CP benchmark, lowered to ReifLinLe (DESIGN.md §10).
+"""N-queens — the classic CP benchmark (DESIGN.md §10, §12).
 
 Place n queens, one per row, so that no two share a column or diagonal.
 Column variable `q_i ∈ (0, n-1)` per row; the three all-different families
 
-    q_i ≠ q_j,   q_i + i ≠ q_j + j,   q_i - i ≠ q_j - j      (i < j)
+    alldifferent(q_i),  alldifferent(q_i + i),  alldifferent(q_i - i)
 
-each decompose by `Model.neq` into the paper's reified disjunction
-b< ⇔ (lhs < rhs) ∥ b> ⇔ (lhs > rhs) ∥ b< + b> ≥ 1, so the whole model is
-guarded-normal-form `ReifLinLe` rows and runs unchanged on every
-propagation backend.
+lower (since §12) to THREE native `AllDifferent` propagator-table rows —
+bounds(Z)-consistent Hall-interval filtering in the fixpoint engine.
+``build_model(inst, decompose=True)`` emits the pre-§12 lowering instead:
+each family decomposed by `Model.neq` into the paper's reified
+disjunction b< ⇔ (lhs < rhs) ∥ b> ⇔ (lhs > rhs) ∥ b< + b> ≥ 1 — a
+3·3·n(n-1)/2-row `ReifLinLe` blowup kept as the parity oracle
+(tests/test_propagators.py); both run unchanged on every backend.
 
 The engine is branch & bound, so the zoo's satisfaction problems carry a
 canonical objective: minimize `q_0` (the first queen's column).  Its
@@ -37,15 +40,22 @@ def generate(n: int, seed: int = 0) -> NQueens:
     return NQueens(n=n, name=f"nqueens-n{n}-s{seed}")
 
 
-def build_model(inst: NQueens) -> Tuple[Model, dict]:
+def build_model(inst: NQueens, decompose: bool = False) -> Tuple[Model, dict]:
     n = inst.n
     m = Model(name=inst.name)
     q = [m.int_var(0, n - 1, f"q{i}") for i in range(n)]
-    for i in range(n):
-        for j in range(i + 1, n):
-            # q_i ≠ q_j + c for c ∈ {0, j-i, i-j}: column + both diagonals
-            for c in (0, j - i, i - j):
-                m.neq(q[i], q[j] + c)
+    if decompose:
+        for i in range(n):
+            for j in range(i + 1, n):
+                # q_i ≠ q_j + c for c ∈ {0, j-i, i-j}: column + diagonals
+                for c in (0, j - i, i - j):
+                    m.neq(q[i], q[j] + c)
+    else:
+        # columns, ↗ diagonals (q_i + i), ↘ diagonals (q_i - i): one
+        # native row each (q_i = q_j + (j-i) ⇔ q_i + i = q_j + j, etc.)
+        m.alldifferent(q)
+        m.alldifferent(q, offsets=[i for i in range(n)])
+        m.alldifferent(q, offsets=[-i for i in range(n)])
     m.minimize(q[0])
     m.branch_on(q)
     return m, dict(q=q, check_vars=q)

@@ -57,11 +57,18 @@ class RCPSP:
         return int(self.durations.sum())
 
 
-def build_model(inst: RCPSP,
-                var_strategy: str = S.MIN_LB) -> Tuple[Model, dict]:
+def build_model(inst: RCPSP, var_strategy: str = S.MIN_LB,
+                decompose: bool = False) -> Tuple[Model, dict]:
     """Compile the paper's PCCP model for an instance.
 
-    Returns (model, handles) where handles maps names to variable lists.
+    Since §12 each renewable resource lowers to ONE native `Cumulative`
+    table row (time-table filtering).  ``decompose=True`` emits the
+    paper-faithful pre-§12 lowering instead — the overlap-boolean
+    decomposition (Schutt et al. 2009) with its O(n²) booleans and
+    ~4·n² `ReifLinLe` rows — kept as the parity oracle.
+
+    Returns (model, handles) where handles maps names to variable lists
+    (``b`` is None in the native lowering).
     """
     n = inst.n_tasks
     h = inst.horizon
@@ -71,30 +78,36 @@ def build_model(inst: RCPSP,
     s = [m.int_var(0, h, f"s{i}") for i in range(n)]
     mk = m.int_var(0, h, "makespan")
 
-    # b[i][j] ⇔ (s_i ≤ s_j ∧ s_j ≤ s_i + d_i - 1): task i runs at s_j's start
-    b = [[None] * n for _ in range(n)]
-    for i in range(n):
-        for j in range(n):
-            bij = m.bool_var(f"b{i}_{j}")
-            b[i][j] = bij
-            if d[i] == 0:
-                m.add(bij <= 0)            # zero-duration tasks never overlap
-                continue
-            m.iff_and(bij, [s[i] - s[j] <= 0,
-                            s[j] - s[i] <= d[i] - 1])
+    b = None
+    if decompose:
+        # b[i][j] ⇔ (s_i ≤ s_j ∧ s_j ≤ s_i + d_i - 1): i runs at s_j's start
+        b = [[None] * n for _ in range(n)]
+        for i in range(n):
+            for j in range(n):
+                bij = m.bool_var(f"b{i}_{j}")
+                b[i][j] = bij
+                if d[i] == 0:
+                    m.add(bij <= 0)        # zero-duration: never overlaps
+                    continue
+                m.iff_and(bij, [s[i] - s[j] <= 0,
+                                s[j] - s[i] <= d[i] - 1])
 
     for (i, j) in inst.precedences:
         m.add(s[i] + d[i] <= s[j])
 
     for k in range(inst.n_resources):
         c_k = int(inst.capacity[k])
-        for j in range(n):
-            terms = [(int(inst.usage[k, i]), b[i][j]) for i in range(n)
-                     if int(inst.usage[k, i]) > 0]
-            if not terms:
-                continue
-            expr = sum((coef * var for coef, var in terms), start=0)
-            m.add(expr <= c_k)
+        used = [i for i in range(n) if int(inst.usage[k, i]) > 0]
+        if not used:
+            continue
+        if decompose:
+            for j in range(n):
+                terms = [(int(inst.usage[k, i]), b[i][j]) for i in used]
+                expr = sum((coef * var for coef, var in terms), start=0)
+                m.add(expr <= c_k)
+        else:
+            m.cumulative([s[i] for i in used], [d[i] for i in used],
+                         [int(inst.usage[k, i]) for i in used], c_k)
 
     for i in range(n):
         m.add(s[i] + d[i] <= mk)

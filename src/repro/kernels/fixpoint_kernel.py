@@ -7,12 +7,15 @@ propagator/occurrence tables are broadcast to every grid cell (index_map
 pins them to block 0), mirroring the constant problem tables in GPU
 constant/global memory.
 
-The kernel body is the *eventless sweep*: every propagator's candidate
-bounds are computed as dense [P, K] tensor ops on the MXU/VPU, then each
-variable gathers the min/max over its occurrence list (a [V, D] gather —
-TPU-native join, no atomics).  The sweep itself is `fixpoint.sweep_tile`,
-the **same** function the XLA gather backend runs — one implementation of
-the semantics, two execution strategies.  A `lax.while_loop` iterates
+The kernel body is the *eventless sweep* over the typed propagator table
+(DESIGN.md §12): every bank's candidate bounds are computed as dense
+tensor ops on the MXU/VPU ([P, K] linear tightenings, [A, N³]
+Hall-interval alldifferent checks, [C, T, H] cumulative time-tables),
+then each variable gathers the min/max over its per-bank occurrence
+lists ([V, D]-style gathers — TPU-native joins, no atomics).  The sweep
+itself is `fixpoint.sweep_tile`, the **same** kind-dispatched function
+the XLA gather backend runs — one implementation of the semantics, two
+execution strategies.  A `lax.while_loop` iterates
 sweeps until no bound changes or a domain empties — fixpoint detection is
 one reduction, standing in for the paper's has_changed[3] +
 __syncthreads().
@@ -40,13 +43,21 @@ from repro.core.fixpoint import sweep_tile
 
 
 def _fixpoint_kernel(vidx_ref, coef_ref, rhs_ref, bidx_ref, occp_ref,
-                     occs_ref, boxlo_ref, boxhi_ref, lb_ref, ub_ref,
+                     occs_ref, adv_ref, ado_ref, adm_ref, adoi_ref,
+                     adop_ref, cus_ref, cud_ref, cuq_ref, cuc_ref,
+                     cuoi_ref, cuop_ref, boxlo_ref, boxhi_ref,
+                     lb_ref, ub_ref,
                      out_lb_ref, out_ub_ref, sweeps_ref, conv_ref,
-                     *, max_sweeps: int):
+                     *, max_sweeps: int, horizon: int, n_alldiff: int,
+                     n_cumulative: int):
     lb = lb_ref[...]
     ub = ub_ref[...]
     tables = (vidx_ref[...], coef_ref[...], rhs_ref[...], bidx_ref[...],
-              occp_ref[...], occs_ref[...], boxlo_ref[...], boxhi_ref[...])
+              occp_ref[...], occs_ref[...],
+              adv_ref[...], ado_ref[...], adm_ref[...], adoi_ref[...],
+              adop_ref[...], cus_ref[...], cud_ref[...], cuq_ref[...],
+              cuc_ref[...], cuoi_ref[...], cuop_ref[...],
+              boxlo_ref[...], boxhi_ref[...])
 
     def cond(st):
         lb_, ub_, changed, it = st
@@ -55,7 +66,9 @@ def _fixpoint_kernel(vidx_ref, coef_ref, rhs_ref, bidx_ref, occp_ref,
 
     def body(st):
         lb_, ub_, _, it = st
-        nlb, nub = sweep_tile(lb_, ub_, *tables)
+        nlb, nub = sweep_tile(lb_, ub_, *tables, horizon=horizon,
+                              n_alldiff=n_alldiff,
+                              n_cumulative=n_cumulative)
         changed = jnp.any((nlb != lb_) | (nub != ub_))
         return nlb, nub, changed, it + 1
 
@@ -89,6 +102,10 @@ def fixpoint_pallas(cm, lb, ub, *, lane_tile: int = 8,
 
     P1, K = cm.vidx.shape
     D = cm.occ_prop.shape[1]
+    A1, N = cm.ad_vars.shape
+    Dad = cm.ad_occ_inst.shape[1]
+    C1, T = cm.cu_svar.shape
+    Dcu = cm.cu_occ_inst.shape[1]
     dt = cm.jdtype
 
     whole = lambda *shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))  # noqa: E731
@@ -96,11 +113,18 @@ def fixpoint_pallas(cm, lb, ub, *, lane_tile: int = 8,
     lane1d = pl.BlockSpec((lane_tile,), lambda i: (i,))
 
     out_lb, out_ub, sweeps, conv = pl.pallas_call(
-        functools.partial(_fixpoint_kernel, max_sweeps=max_sweeps),
+        functools.partial(_fixpoint_kernel, max_sweeps=max_sweeps,
+                          horizon=cm.horizon, n_alldiff=cm.n_alldiff,
+                          n_cumulative=cm.n_cumulative),
         grid=grid,
         in_specs=[
             whole(P1, K), whole(P1, K), whole(P1), whole(P1),
-            whole(V, D), whole(V, D), whole(V), whole(V),
+            whole(V, D), whole(V, D),
+            whole(A1, N), whole(A1, N), whole(A1, N),
+            whole(V, Dad), whole(V, Dad),
+            whole(C1, T), whole(C1, T), whole(C1, T), whole(C1),
+            whole(V, Dcu), whole(V, Dcu),
+            whole(V), whole(V),
             tiled, tiled,
         ],
         out_specs=[tiled, tiled, lane1d, lane1d],
@@ -112,5 +136,8 @@ def fixpoint_pallas(cm, lb, ub, *, lane_tile: int = 8,
         ],
         interpret=interpret,
     )(cm.vidx, cm.coef, cm.rhs, cm.bidx, cm.occ_prop, cm.occ_slot,
+      cm.ad_vars, cm.ad_offs, cm.ad_mask, cm.ad_occ_inst, cm.ad_occ_pos,
+      cm.cu_svar, cm.cu_dur, cm.cu_dem, cm.cu_cap,
+      cm.cu_occ_inst, cm.cu_occ_pos,
       cm.box_lo, cm.box_hi, lb, ub)
     return out_lb[:L], out_ub[:L], sweeps[:L], conv[:L].astype(bool)

@@ -13,12 +13,13 @@ All three compute the same least fixed point (tests sweep shapes/dtypes
 and assert exact equality — integer lattice, so allclose is `array_equal`).
 
 Comparison spec: implementations agree (a) on the failed mask, and (b)
-exactly on every non-failed lane's store.  Failed lanes' *contents* are
-unspecified — search discards them — and legitimately differ: the scatter
-oracle signals plain-constraint disentailment through the TRUE var, the
-gather forms through term bounds, and early-exit points differ per impl
-(a transiently-disentailed plain constraint can only occur on lanes that
-end failed, so non-failed lanes see identical sweep sequences).
+exactly on every non-failed lane's store.  Since the §12 typed-table
+refactor the gather and scatter forms compute bit-identical stores per
+*sweep* (the scatter form no longer scatters plain rows' disentailment
+slot onto the TRUE var — a disentailed plain row fails through term
+tightening in the same sweep), so the XLA backends agree on every lane
+even under a sweep cap; failed-lane contents may still differ vs the
+Pallas kernel, whose tile-lockstep loop has different early-exit points.
 """
 
 from __future__ import annotations

@@ -169,7 +169,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
     t0 = time.time()
     fn, args, out_shardings, donate = build_cell(arch, shape_name, mesh,
                                                  chunks)
-    with jax.set_mesh(mesh):
+    from repro.compat import use_mesh
+    with use_mesh(mesh):
         jitted = jax.jit(fn, out_shardings=out_shardings,
                          donate_argnums=donate)
         lowered = jitted.lower(*args)
@@ -178,7 +179,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
         compiled = lowered.compile()
         t_compile = time.time() - t0
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    from repro.compat import cost_analysis
+    ca = cost_analysis(compiled)
     txt = compiled.as_text()
     coll = collective_bytes(txt)
     rec = {

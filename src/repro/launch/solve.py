@@ -107,11 +107,12 @@ def main():
         carry_spec = (state_spec, P(), P(), P(), spec)
         dev_fn = lambda sl, su, c: _run_chunk(   # noqa: E731
             opts, False, 64, axes, cm, sl, su, c)
-        f = jax.jit(jax.shard_map(dev_fn, mesh=mesh,
-                                  in_specs=(spec, spec, carry_spec),
-                                  out_specs=carry_spec, check_vma=False))
+        from repro.compat import shard_map, use_mesh
+        f = jax.jit(shard_map(dev_fn, mesh=mesh,
+                              in_specs=(spec, spec, carry_spec),
+                              out_specs=carry_spec, check_vma=False))
         t0 = time.time()
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             lowered = f.lower(
                 jax.ShapeDtypeStruct((Spool, V), cm.jdtype,
                                      sharding=jax.NamedSharding(mesh, spec)),

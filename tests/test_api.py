@@ -245,9 +245,11 @@ def test_solve_iter_monotone_bound_trace():
 
 def test_solve_iter_max_supersteps_anytime():
     """A superstep budget turns into an anytime answer: SAT with the
-    best incumbent found so far, not a blocking failure."""
+    best incumbent found so far, not a blocking failure.  Decomposed
+    lowering: the native §12 propagators finish this instance inside the
+    budget, which would make the early-out unreachable."""
     inst = rcpsp.generate(6, n_resources=2, seed=3, edge_prob=0.25)
-    m, _ = rcpsp.build_model(inst)
+    m, _ = rcpsp.build_model(inst, decompose=True)
     cm = m.compile()
     sess = solver.Solver(solver.SolveConfig.preset(
         "prove", n_lanes=4, eps_target=8, chunk=4, max_depth=256,

@@ -88,9 +88,12 @@ def test_decompose_hits_target_region():
 
 def test_eps_target_same_optimum_fewer_supersteps():
     """The acceptance bar: solve(eps_target=n_lanes) matches single-root
-    search on seeded RCPSP and takes strictly fewer supersteps."""
+    search on seeded RCPSP and takes strictly fewer supersteps.  Uses the
+    decomposed lowering: the native §12 propagators solve this instance
+    in so few supersteps that the EPS-vs-single-root gap (what this test
+    measures) vanishes into the chunk granularity."""
     inst = rcpsp.generate(5, n_resources=2, seed=1, edge_prob=0.3)
-    m, _ = rcpsp.build_model(inst)
+    m, _ = rcpsp.build_model(inst, decompose=True)
     cm = m.compile()
     opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=256)
     single = engine.solve(cm, n_lanes=8, eps_target=1, opts=opts)

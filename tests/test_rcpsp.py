@@ -33,9 +33,10 @@ def test_generator_feasible_by_construction():
 
 
 def test_overlap_booleans_consistent():
-    """In any optimal solution, b_ij must equal the overlap predicate."""
+    """In any optimal solution, b_ij must equal the overlap predicate
+    (the decomposed lowering — the native §12 one has no booleans)."""
     inst = rcpsp.generate(5, n_resources=2, seed=4, edge_prob=0.3)
-    m, h = rcpsp.build_model(inst)
+    m, h = rcpsp.build_model(inst, decompose=True)
     cm = m.compile()
     res = engine.solve(cm, n_lanes=4, n_subproblems=8,
                        opts=S.SearchOptions(var_strategy=S.MIN_LB,
