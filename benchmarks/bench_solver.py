@@ -29,6 +29,12 @@ replaced), so the table-size win is tracked per PR alongside nodes/s.
 solve (compile amortization) and `solve_many` batched dispatch
 (instances/s) vs sequential warm solves; records land in the `api`
 section of the bench JSON.
+
+``--superstep-bench`` is the resident-megakernel metric (DESIGN.md §13):
+per backend, one warm solve driven at ``chunk=1`` host granularity,
+recording ms_per_superstep / supersteps_per_sec / dispatches_per_solve
+into the `superstep` section — the unfused backends pay one host
+dispatch per superstep, ``pallas_resident`` one per K supersteps.
 """
 
 from __future__ import annotations
@@ -106,53 +112,125 @@ def run_suite(name: str, instances: List[rcpsp.RCPSP], timeout_s: float,
 
 
 def run_zoo(timeout_s: float, lanes: int, eps_target: int, rows: List[str],
-            backend: str = "gather", smoke: bool = False, seed: int = 0):
+            backend="gather", smoke: bool = False, seed: int = 0):
     """Per-model solver numbers across the whole zoo (DESIGN.md §10):
     nodes/s and time-to-optimum through the EPS-decomposed engine.
+    `backend` may be a name or a sequence of names (the smoke tier
+    records every registered backend, pallas_resident included, so the
+    `solver` section tracks objective parity per backend per PR).
     Returns the JSON-able records for the BENCH `solver` section."""
-    cfg = solver.SolveConfig.preset(
-        "prove", n_lanes=lanes, eps_target=eps_target, timeout_s=timeout_s,
-        backend=backend, max_depth=512)
-    sess = solver.Solver(cfg)
+    backends = ((backend,) if isinstance(backend, str) else tuple(backend))
     records = []
-    for name in sorted(zoo.ZOO):
-        mod = zoo.ZOO[name]
-        inst = (zoo.small_instance(name, seed=seed) if smoke
-                else zoo.bench_instance(name, seed=seed))
-        m, h = mod.build_model(inst)
-        cm = m.compile()
-        # typed-table size vs the pre-§12 ReifLinLe decomposition (models
-        # without a native lowering — knapsack — compile identically)
-        import inspect
-        if "decompose" in inspect.signature(mod.build_model).parameters:
-            cmd = mod.build_model(inst, decompose=True)[0].compile()
-            decomposed_props = cmd.total_props
-        else:
-            decomposed_props = cm.total_props
-        res = sess.solve(cm)
-        # True/False = checked; None = nothing to check (timeout/UNSAT)
-        checked = zoo.ground_check(mod, inst, h, res)
-        rows.append(f"zoo,{name},{backend},{res.status},{res.objective},"
-                    f"{res.nodes_per_sec:.0f},{res.wall_s:.2f},{checked},"
-                    f"P={cm.total_props}/{decomposed_props}")
-        # time to the *proven* optimum: wall clock until B&B returned
-        # OPTIMAL, jit compile included (the honest CPU-emulation figure);
-        # the improvements trace now also gives time-to-incumbent
-        records.append(dict(
-            model=name, instance=inst.name, backend=backend,
-            status=res.status, objective=res.objective,
-            n_props=cm.total_props,
-            n_props_by_kind=dict(lin=cm.n_props, alldiff=cm.n_alldiff,
-                                 cumulative=cm.n_cumulative),
-            n_props_decomposed=decomposed_props,
-            n_vars=cm.n_vars,
-            n_nodes=res.n_nodes, nodes_per_sec=res.nodes_per_sec,
+    objectives = {}                       # model -> {backend: objective}
+    for be in backends:
+        cfg = solver.SolveConfig.preset(
+            "prove", n_lanes=lanes, eps_target=eps_target,
+            timeout_s=timeout_s, backend=be, max_depth=512)
+        sess = solver.Solver(cfg)
+        for name in sorted(zoo.ZOO):
+            mod = zoo.ZOO[name]
+            inst = (zoo.small_instance(name, seed=seed) if smoke
+                    else zoo.bench_instance(name, seed=seed))
+            m, h = mod.build_model(inst)
+            cm = m.compile()
+            # typed-table size vs the pre-§12 ReifLinLe decomposition
+            # (models without a native lowering — knapsack — compile
+            # identically)
+            import inspect
+            if "decompose" in inspect.signature(mod.build_model).parameters:
+                cmd = mod.build_model(inst, decompose=True)[0].compile()
+                decomposed_props = cmd.total_props
+            else:
+                decomposed_props = cm.total_props
+            res = sess.solve(cm)
+            # True/False = checked; None = nothing to check (timeout/UNSAT)
+            checked = zoo.ground_check(mod, inst, h, res)
+            rows.append(f"zoo,{name},{be},{res.status},{res.objective},"
+                        f"{res.nodes_per_sec:.0f},{res.wall_s:.2f},"
+                        f"{checked},P={cm.total_props}/{decomposed_props}")
+            objectives.setdefault(name, {})[be] = (res.status,
+                                                   res.objective)
+            # time to the *proven* optimum: wall clock until B&B returned
+            # OPTIMAL, jit compile included (the honest CPU-emulation
+            # figure); the improvements trace also gives time-to-incumbent
+            records.append(dict(
+                model=name, instance=inst.name, backend=be,
+                status=res.status, objective=res.objective,
+                n_props=cm.total_props,
+                n_props_by_kind=dict(lin=cm.n_props, alldiff=cm.n_alldiff,
+                                     cumulative=cm.n_cumulative),
+                n_props_decomposed=decomposed_props,
+                n_vars=cm.n_vars,
+                n_nodes=res.n_nodes, nodes_per_sec=res.nodes_per_sec,
+                n_supersteps=res.n_supersteps,
+                time_to_proven_optimum_s=(
+                    res.wall_s if res.status == solver.OPTIMAL else None),
+                time_to_first_incumbent_s=(
+                    res.improvements[0].wall_s if res.improvements
+                    else None),
+                wall_s=res.wall_s, ground_check=checked))
+    # cross-backend determinism: proven optima must agree bit-for-bit
+    for name, per_be in objectives.items():
+        proven = {o for s, o in per_be.values() if s == solver.OPTIMAL}
+        if len(proven) > 1:
+            raise SystemExit(f"zoo objective mismatch on {name}: {per_be}")
+    return records
+
+
+def run_superstep_bench(rows: List[str], backends, lanes: int = 8,
+                        eps_target: int = 16, timeout_s: float = 300.0,
+                        supersteps_per_launch: int = 16):
+    """Superstep-orchestration overhead per backend (the ISSUE-6 metric):
+    drive each solve at the finest host granularity — ``chunk=1`` so
+    every unfused runner call is exactly ONE superstep (one host
+    dispatch of the 4-phase `lanes_step`), while ``pallas_resident``
+    returns per K-superstep megakernel launch — and count the host
+    dispatches to completion via the `solve_iter` event stream (one
+    event per runner call, by the Progress granularity contract).
+
+    Records ms_per_superstep / supersteps_per_sec / dispatches_per_solve
+    (warm timings; the cold solve is run first to compile) for the BENCH
+    `superstep` section.
+    """
+    inst = zoo.small_instance("rcpsp", seed=0)
+    m, _ = zoo.ZOO["rcpsp"].build_model(inst)
+    cm = m.compile()
+    records = []
+    for backend in backends:
+        kw = dict(supersteps_per_launch=supersteps_per_launch) \
+            if backend == "pallas_resident" else {}
+        cfg = solver.SolveConfig.preset(
+            "prove", n_lanes=lanes, eps_target=eps_target, chunk=1,
+            timeout_s=timeout_s, backend=backend, max_depth=512, **kw)
+        sess = solver.Solver(cfg)
+        res = sess.solve(cm)                       # cold: compile
+        wall = float("inf")
+        for _ in range(5):                         # warm: best of 5 drains
+            t0 = time.time()
+            dispatches = 0
+            for ev in sess.solve_iter(cm):
+                dispatches += 1
+                if ev.final:
+                    res = ev.result
+            wall = min(wall, time.time() - t0)
+        n_steps = max(res.n_supersteps, 1)
+        rec = dict(
+            backend=backend, model=inst.name,
+            supersteps_per_launch=(supersteps_per_launch
+                                   if backend == "pallas_resident" else 1),
             n_supersteps=res.n_supersteps,
-            time_to_proven_optimum_s=(
-                res.wall_s if res.status == solver.OPTIMAL else None),
-            time_to_first_incumbent_s=(
-                res.improvements[0].wall_s if res.improvements else None),
-            wall_s=res.wall_s, ground_check=checked))
+            dispatches_per_solve=dispatches,
+            ms_per_superstep=round(1e3 * wall / n_steps, 3),
+            supersteps_per_sec=round(n_steps / max(wall, 1e-9), 1),
+            status=res.status, objective=res.objective,
+            wall_s=round(wall, 4))
+        records.append(rec)
+        rows.append(
+            f"superstep,{backend},K={rec['supersteps_per_launch']},"
+            f"steps={rec['n_supersteps']},"
+            f"dispatches={rec['dispatches_per_solve']},"
+            f"{rec['ms_per_superstep']}ms/step,"
+            f"{rec['supersteps_per_sec']}steps/s,{res.status}")
     return records
 
 
@@ -276,6 +354,14 @@ def main(argv=None):
                          "compile amortization + solve_many instances/s on "
                          "4 knapsack instances, all backends (the make-"
                          "check api tier)")
+    ap.add_argument("--superstep-bench", action="store_true",
+                    help="ONLY the superstep-orchestration benchmark "
+                         "(DESIGN.md §13): ms_per_superstep / "
+                         "supersteps_per_sec / dispatches_per_solve per "
+                         "backend at chunk=1 host granularity; records go "
+                         "to the bench JSON `superstep` section")
+    ap.add_argument("--supersteps-per-launch", type=int, default=16,
+                    help="K for pallas_resident in --superstep-bench")
     ap.add_argument("--eps-target", type=int, default=64,
                     help="EPS pool size for the zoo runs (DESIGN.md §9)")
     ap.add_argument("--json", default=None,
@@ -284,12 +370,23 @@ def main(argv=None):
                          "its `api` section), e.g. "
                          "BENCH_propagation_smoke.json")
     args = ap.parse_args(argv)
-    if args.json and not (args.zoo or args.zoo_smoke or args.throughput):
-        ap.error("--json records the zoo/api sections; pass --zoo, "
-                 "--zoo-smoke or --throughput")
+    if args.json and not (args.zoo or args.zoo_smoke or args.throughput
+                          or args.superstep_bench):
+        ap.error("--json records the zoo/api/superstep sections; pass "
+                 "--zoo, --zoo-smoke, --throughput or --superstep-bench")
     timeout = args.timeout or (300 if args.full else 30)
 
     rows = []
+    if args.superstep_bench:
+        rows.append("superstep,backend,K,steps,dispatches,ms_per_step,"
+                    "steps_per_sec,status")
+        records = run_superstep_bench(
+            rows, backends=available_backends(), timeout_s=timeout,
+            supersteps_per_launch=args.supersteps_per_launch)
+        print("\n".join(rows))
+        if args.json:
+            merge_json(args.json, "superstep", records)
+        return rows
     if args.throughput:
         rows.append("api,backend,cold,warm,speedup,batched,sequential,"
                     "parity")
@@ -312,8 +409,11 @@ def main(argv=None):
                     "time_s,ground_check,props_native/decomposed")
         smoke = (args.zoo_size == "small" if args.zoo_size
                  else args.zoo_smoke)
+        # the smoke tier sweeps EVERY backend (objective-parity gate);
+        # full --zoo runs stay single-backend (they're minutes-scale)
+        be = available_backends() if args.zoo_smoke else args.backend
         records = run_zoo(timeout, args.lanes, args.eps_target, rows,
-                          backend=args.backend, smoke=smoke)
+                          backend=be, smoke=smoke)
     print("\n".join(rows))
     if args.json and records is not None:
         write_solver_json(args.json, records)

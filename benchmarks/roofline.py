@@ -179,14 +179,87 @@ def roofline_cell(arch: str, shape_name: str, multi_pod: bool = False
     }
 
 
+def solver_roofline(lanes: int = 32, supersteps_per_launch: int = 16
+                    ) -> Dict:
+    """Superstep roofline for the constraint solver (DESIGN.md §13).
+
+    Two terms bound a superstep of the resident search megakernel on the
+    zoo smoke tier:
+
+      memory   = per-launch VMEM traffic / HBM_BW — the state the kernel
+                 streams in/out of HBM once per K supersteps (tables +
+                 lane state + subproblem pool), amortized over K;
+      dispatch = host launch overhead / K — measured per-dispatch cost
+                 from the unfused path (`bench_solver --superstep-bench`
+                 ms_per_superstep is dominated by it on CPU interpret).
+
+    The unfused path pays BOTH terms every superstep (traffic and a
+    dispatch per phase); the resident kernel pays traffic once per
+    launch and keeps supersteps in VMEM, so its modeled
+    ms_per_superstep(K) = t_kernel + overhead/K — the K-amortization
+    curve this function tabulates.
+    """
+    from repro.core import models as zoo
+    from repro.kernels.fixpoint_kernel import vmem_budget
+
+    inst = zoo.small_instance("rcpsp", seed=0)
+    cm = zoo.ZOO["rcpsp"].build_model(inst)[0].compile()
+    K = supersteps_per_launch
+    bud = vmem_budget(cm, lanes, resident=True, max_depth=512,
+                      pool_size=64)
+    traffic = bud["total"]                    # bytes in+out per launch
+    t_mem_launch = traffic / HBM_BW
+    # per-dispatch host overhead: order-10µs on a real accelerator
+    # (launch latency); the measured CPU-interpret figure lives in
+    # BENCH_propagation_smoke.json's `superstep` section
+    overhead_s = 10e-6
+    curve = {k: round(1e3 * (t_mem_launch / k + overhead_s / k
+                             + t_mem_launch), 6)
+             for k in (1, 4, 16, 64)}
+    rec = {
+        "model": inst.name, "lanes": lanes, "K": K,
+        "vmem_bytes": {k: int(v) for k, v in bud.items()},
+        "launch_traffic_bytes": int(traffic),
+        "memory_s_per_launch": round(t_mem_launch, 9),
+        "dispatch_overhead_s": overhead_s,
+        "modeled_ms_per_superstep_by_K": curve,
+        "bottleneck": ("dispatch" if overhead_s > t_mem_launch
+                       else "memory"),
+    }
+    print(f"solver roofline: {inst.name} lanes={lanes} "
+          f"VMEM={bud['total']/2**20:.2f}MiB "
+          f"traffic={traffic/2**10:.1f}KiB/launch "
+          f"bottleneck={rec['bottleneck']}")
+    for k, ms in curve.items():
+        print(f"  K={k:>3}: modeled {ms:.6f} ms/superstep")
+    return rec
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--solver", action="store_true",
+                    help="ONLY the solver superstep roofline (DESIGN.md "
+                         "§13): VMEM footprint, per-launch HBM traffic "
+                         "and the K-amortization curve for the resident "
+                         "megakernel")
+    ap.add_argument("--lanes", type=int, default=32)
+    ap.add_argument("--supersteps-per-launch", type=int, default=16)
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+
+    if args.solver:
+        rec = solver_roofline(
+            lanes=args.lanes,
+            supersteps_per_launch=args.supersteps_per_launch)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(rec, f, indent=1)
+            print("wrote", args.out)
+        return [rec]
 
     from repro import configs
     cells = []

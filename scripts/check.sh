@@ -10,9 +10,16 @@
 # (all five models through the EPS engine, DESIGN.md §10, with per-model
 # typed-propagator-table sizes, §12), a session-API smoke (cold+warm
 # compile amortization + solve_many batched throughput on 4 knapsack
-# instances, DESIGN.md §11) and the docs check, writing
-# BENCH_propagation_smoke.json (propagation rows + `solver` + `api`
-# sections) at the repo root so the perf trajectory populates per PR.
+# instances, DESIGN.md §11), a resident-megakernel smoke (one
+# pallas_resident solve in interpret mode on CPU, DESIGN.md §13 — its
+# K-launch bit-parity suite tests/test_resident.py already runs inside
+# tier-1), the superstep-orchestration bench (ms_per_superstep +
+# dispatches_per_solve per backend) and the docs check, writing
+# BENCH_propagation_smoke.json (propagation rows + `solver` + `api` +
+# `superstep` sections) at the repo root so the perf trajectory
+# populates per PR.  The zoo smoke sweeps EVERY registered backend,
+# pallas_resident included, and hard-fails on any proven-optimum
+# mismatch between backends.
 #
 # Exit code: nonzero on ANY test failure, collection error or bench
 # failure.
@@ -44,9 +51,19 @@ python -m benchmarks.bench_propagation \
     --sizes 6 8 --lanes 8 --json BENCH_propagation_smoke.json || exit 1
 
 echo
-echo "== model-zoo solver smoke (5 models, EPS engine, propagator counts) =="
+echo "== resident megakernel smoke (pallas_resident, interpret on CPU) =="
+python -m repro.launch.solve --n 8 --lanes 8 --subs 16 \
+    --backend pallas_resident --supersteps-per-launch 16 || exit 1
+
+echo
+echo "== model-zoo solver smoke (5 models, EPS engine, ALL backends) =="
 python -m benchmarks.bench_solver \
     --zoo-smoke --json BENCH_propagation_smoke.json || exit 1
+
+echo
+echo "== superstep bench (dispatch amortization, all backends, §13) =="
+python -m benchmarks.bench_solver \
+    --superstep-bench --json BENCH_propagation_smoke.json || exit 1
 
 echo
 echo "== session-API smoke (cold+warm solve, solve_many x4, all backends) =="

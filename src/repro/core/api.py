@@ -73,7 +73,11 @@ class SolveResult:
     wall_s: float
     complete: bool
     # anytime trace: every (superstep, wall_s, objective) at which the
-    # global incumbent improved, chunk-granular (DESIGN.md §11).
+    # global incumbent improved, observed at scheduler-quantum
+    # granularity (DESIGN.md §11): per host chunk for unfused backends,
+    # per K-superstep launch for pallas_resident — improvements landing
+    # within one quantum collapse into a single trace entry whose
+    # `superstep` is the quantum's end.
     improvements: Tuple[Improvement, ...] = ()
 
     @property
@@ -83,7 +87,13 @@ class SolveResult:
 
 @dataclasses.dataclass
 class Progress:
-    """One anytime event from `Solver.solve_iter`, emitted per host chunk.
+    """One anytime event from `Solver.solve_iter`, emitted per scheduler
+    quantum — i.e. once per `_run_chunk` return to the host: every
+    ``chunk`` supersteps for the unfused backends, every
+    ``supersteps_per_launch`` (K) supersteps for ``pallas_resident``
+    (whose megakernel only re-enters the host per launch, DESIGN.md
+    §13).  Anytime consumers should key off ``superstep``/``wall_s``,
+    not event counts.
 
     The last event has ``final=True`` and carries the terminal
     `SolveResult` in ``result``; earlier events report the running
@@ -141,6 +151,10 @@ class SolveConfig:
     # propagation backend (core/backend.py)
     backend: str = "gather"
     backend_opts: Tuple[Tuple[str, Any], ...] = ()
+    # pallas_resident only: supersteps fused per megakernel launch (K in
+    # DESIGN.md §13); merged into backend_opts, so it is part of the
+    # compile key.  None → the backend default (16).
+    supersteps_per_launch: Optional[int] = None
     # search strategy (core/search.py)
     var_strategy: str = S.INPUT_ORDER
     val_strategy: str = S.VAL_MIN
@@ -175,10 +189,20 @@ class SolveConfig:
             v = getattr(self, name)
             if not isinstance(v, int) or v < 1:
                 bad(f"{name} must be a positive int, got {v!r}")
-        for name in ("eps_target", "max_supersteps", "max_fixpoint_iters"):
+        for name in ("eps_target", "max_supersteps", "max_fixpoint_iters",
+                     "supersteps_per_launch"):
             v = getattr(self, name)
             if v is not None and (not isinstance(v, int) or v < 1):
                 bad(f"{name} must be None or a positive int, got {v!r}")
+        if self.supersteps_per_launch is not None:
+            if self.backend != "pallas_resident":
+                bad("supersteps_per_launch is only meaningful with "
+                    "backend='pallas_resident'")
+            opts = dict(self.backend_opts)
+            opts.setdefault("supersteps_per_launch",
+                            self.supersteps_per_launch)
+            object.__setattr__(self, "backend_opts",
+                               tuple(sorted(opts.items())))
         if self.timeout_s is not None and not self.timeout_s > 0:
             bad(f"timeout_s must be None or > 0, got {self.timeout_s!r}")
 
@@ -196,6 +220,10 @@ class SolveConfig:
         if self.val_strategy not in _VAL_STRATEGIES:
             bad(f"val_strategy {self.val_strategy!r} not in "
                 f"{_VAL_STRATEGIES}")
+        if self.mesh is not None and self.backend == "pallas_resident":
+            bad("backend 'pallas_resident' does not support mesh "
+                "sharding: the EPS pool cursor is per-device VMEM state "
+                "inside the megakernel (use backend='pallas' on meshes)")
         if self.lane_axes and self.mesh is None:
             bad("lane_axes given without a mesh")
         if self.mesh is not None:
@@ -246,6 +274,7 @@ class SolveConfig:
         (timeout_s, max_supersteps) and eps_target are host-side only —
         two configs differing only there share one compiled runner."""
         return (self.n_lanes, self.chunk, self.backend, self.backend_opts,
+                self.supersteps_per_launch,
                 self.var_strategy, self.val_strategy, self.max_depth,
                 self.max_fixpoint_iters, self.stop_on_first, self.mesh,
                 self.lane_axes)
@@ -305,8 +334,26 @@ def _chunk_body(opts: S.SearchOptions, stop_on_first: bool, axis_names,
 
 def _run_chunk(opts: S.SearchOptions, stop_on_first: bool, chunk: int,
                axis_names, cm: CompiledModel, subs_lb, subs_ub, carry):
-    """`chunk` supersteps (or until done) — the unit of jit compilation
-    and of host control (timeouts, anytime progress events)."""
+    """One scheduler quantum — the unit of jit compilation and of host
+    control (timeouts, anytime progress events).
+
+    * unfused backends: a `while_loop` of up to `chunk` supersteps, each
+      one `lanes_step` (four XLA dispatches per superstep);
+    * ``pallas_resident``: ONE megakernel launch covering K =
+      ``supersteps_per_launch`` supersteps (DESIGN.md §13) — `chunk` is
+      not consulted; the kernel derives the global-done flag from state
+      each fused superstep and runs identity steps once stopped, so the
+      launch is idempotent and safe to re-issue (solve_many's vmap
+      relies on this to freeze finished instances).
+    """
+    if opts.backend == "pallas_resident":
+        from repro.core.backend import get_backend
+        be = get_backend(opts.backend, **dict(opts.backend_opts))
+        st, gbest, gdone, it, pool_head = carry
+        st, gbest, it, pool_head, stopped = be.superstep_launch(
+            cm, subs_lb, subs_ub, st, gbest, it, pool_head, opts=opts)
+        return st, gbest, gdone | stopped, it, pool_head
+
     it0 = carry[3]
 
     def body(c):
@@ -317,6 +364,19 @@ def _run_chunk(opts: S.SearchOptions, stop_on_first: bool, chunk: int,
         return (~c[2]) & (c[3] - it0 < chunk)
 
     return lax.while_loop(cond, body, carry)
+
+
+def _carry_heads(cfg: "SolveConfig", cm: CompiledModel,
+                 pool_size: int) -> int:
+    """Pool-cursor slots in the carry: one per resident-megakernel grid
+    cell (`PallasResidentBackend.n_tiles`, usually 1), one otherwise.
+    Mesh configs size per-device heads separately (see solve_iter)."""
+    if cfg.backend != "pallas_resident":
+        return 1
+    from repro.core.backend import get_backend
+    be = get_backend(cfg.backend, **dict(cfg.backend_opts))
+    return be.n_tiles(cm, cfg.n_lanes, max_depth=cfg.max_depth,
+                      pool_size=pool_size)
 
 
 def _init_carry(cm: CompiledModel, n_lanes: int, opts: S.SearchOptions,
@@ -541,9 +601,11 @@ class Solver:
                    subs: Optional[tuple] = None,
                    config: Optional[SolveConfig] = None,
                    **overrides) -> Iterator[Progress]:
-        """Anytime solve: yields a `Progress` event after every host
-        chunk; the final event (``final=True``) carries the
-        `SolveResult` (with its `improvements` trace)."""
+        """Anytime solve: yields a `Progress` event after every
+        scheduler quantum (host chunk; one K-superstep megakernel launch
+        under ``backend="pallas_resident"``); the final event
+        (``final=True``) carries the `SolveResult` (with its
+        `improvements` trace)."""
         cfg = self._config_for(config, overrides)
         opts = cfg.search_options()
         t0 = time.time()
@@ -558,7 +620,9 @@ class Solver:
             carry = _init_carry(cm, cfg.n_lanes * n_dev, opts,
                                 n_heads=n_dev)
         else:
-            carry = _init_carry(cm, cfg.n_lanes, opts)
+            carry = _init_carry(
+                cm, cfg.n_lanes, opts,
+                n_heads=_carry_heads(cfg, cm, int(subs_lb.shape[0])))
         compiles0 = runner.n_compiles
         self.stats["last_solve_cold"] = None  # set after first chunk
 
@@ -665,7 +729,8 @@ class Solver:
         subs_ub = jnp.asarray(np.stack([p[1] for p in padded]))
 
         cm_b = jax.tree.map(lambda *xs: jnp.stack(xs), *cms)
-        carry1 = _init_carry(cm0, cfg.n_lanes, opts)
+        carry1 = _init_carry(cm0, cfg.n_lanes, opts,
+                             n_heads=_carry_heads(cfg, cm0, size))
         carry = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (N,) + x.shape), carry1)
 

@@ -8,7 +8,7 @@ needs two entry points:
 * ``fixpoint_batch(cm, lb, ub)``  — a whole ``[n_lanes, V]`` store tensor
   in one launch (the TURBO superstep shape: grid cells = lane tiles).
 
-`PropagationBackend` is that contract; three implementations register
+`PropagationBackend` is that contract; four implementations register
 here and are selected by name everywhere a store is propagated
 (`SearchOptions.backend` → `engine.solve` → `launch/solve.py` CLI →
 benchmarks → examples):
@@ -19,9 +19,14 @@ benchmarks → examples):
                reading of the paper's atomic load/store compilation;
   ``pallas``   the VMEM-resident Pallas TPU kernel
                (`kernels/fixpoint_kernel.fixpoint_pallas`), interpret-mode
-               on CPU, real `pallas_call` on TPU.
+               on CPU, real `pallas_call` on TPU;
+  ``pallas_resident``
+               the resident *search* megakernel (DESIGN.md §13): K whole
+               supersteps — dispatch, branch, fixpoint, commit — fused
+               into one `pl.pallas_call` that the host chunk scheduler
+               launches once per K supersteps.
 
-All three compute the same least fixed point from the same single
+All four compute the same least fixed point from the same single
 implementation of the propagator math (`fixpoint.candidates_tile`);
 parity is property-tested in `tests/test_backends.py`.  The comparison
 spec (see `kernels/ops.py`): equal failed-lane masks, bit-identical
@@ -137,6 +142,65 @@ class PallasBackend:
                              interpret=self.interpret)
 
 
+class PallasResidentBackend(PallasBackend):
+    """Resident search megakernel (DESIGN.md §13): K supersteps of the
+    whole four-phase search loop fused into one `pl.pallas_call`, with
+    every piece of lane state (stores, decision paths, status flags,
+    pool cursor, tile-best bound) held in VMEM across supersteps
+    (`kernels/fixpoint_kernel.search_pallas`).
+
+    As a plain `PropagationBackend` it behaves like `pallas` (the
+    inherited unfused fixpoint kernel, with ``lane_tile=8`` when the
+    resident tile is the whole-batch default 0) — the fused path is the
+    extra `superstep_launch` contract consumed by the host chunk
+    scheduler (`core/api._run_chunk`), which calls it once per K
+    supersteps instead of driving `search.lanes_step` per superstep.
+
+    ``lane_tile=0`` (default) keeps all lanes in ONE grid cell — the
+    bit-parity mode whose EPS dispatch is the exact shared queue of the
+    unfused path; a positive tile (or a VMEM auto-shrink) shards the
+    pool across cells (sound/complete, different dispatch trajectory).
+    """
+
+    name = "pallas_resident"
+
+    def __init__(self, supersteps_per_launch: int = 16, lane_tile: int = 0,
+                 interpret: Optional[bool] = None, max_sweeps: int = 16384):
+        super().__init__(lane_tile=lane_tile or 8, interpret=interpret,
+                         max_sweeps=max_sweeps)
+        self.resident_lane_tile = lane_tile
+        self.supersteps_per_launch = supersteps_per_launch
+
+    def n_tiles(self, cm: CompiledModel, n_lanes: int, *, max_depth: int,
+                pool_size: int) -> int:
+        """Grid cells the resident kernel will use for `n_lanes` lanes —
+        the host scheduler sizes the per-cell pool-cursor carry
+        (`api._init_carry(n_heads=...)`) with this so carry shapes stay
+        stable across launches."""
+        from repro.kernels.fixpoint_kernel import fit_lane_tile
+        tile = (n_lanes if self.resident_lane_tile in (0, None)
+                else self.resident_lane_tile)
+        tile = fit_lane_tile(cm, tile, n_lanes, resident=True,
+                             max_depth=max_depth, pool_size=pool_size)
+        return -(n_lanes // -tile)
+
+    def superstep_launch(self, cm: CompiledModel, subs_lb, subs_ub, st,
+                         gbest, it, pool_head, *, opts):
+        """One K-superstep megakernel launch; returns
+        ``(st', gbest', it', pool_head', stopped)``."""
+        from repro.kernels.fixpoint_kernel import search_pallas
+        return search_pallas(
+            cm, subs_lb, subs_ub, st, gbest, it, pool_head,
+            supersteps=self.supersteps_per_launch,
+            lane_tile=self.resident_lane_tile,
+            max_sweeps=self.max_sweeps,
+            max_fixpoint_iters=opts.max_fixpoint_iters,
+            var_strategy=opts.var_strategy,
+            val_strategy=opts.val_strategy,
+            stop_on_first=opts.stop_on_first,
+            interpret=self.interpret)
+
+
 _REGISTRY: Dict[str, Callable[..., PropagationBackend]] = {}
 
 
@@ -165,3 +229,4 @@ def get_backend(name: str, **opts) -> PropagationBackend:
 register_backend("gather", GatherBackend)
 register_backend("scatter", ScatterBackend)
 register_backend("pallas", PallasBackend)
+register_backend("pallas_resident", PallasResidentBackend)

@@ -426,25 +426,30 @@ def fixpoint(cm: CompiledModel, lb: jax.Array, ub: jax.Array,
     return lb, ub, iters, converged
 
 
-@partial(jax.jit, static_argnames=("max_iters", "stop_on_fail", "use_scatter"))
-def fixpoint_batch(cm: CompiledModel, lb: jax.Array, ub: jax.Array,
-                   max_iters: Optional[int] = None, stop_on_fail: bool = True,
-                   use_scatter: bool = False):
-    """Lane-batched fixpoint: one `while_loop` over the whole ``[L, V]``
-    store tensor, each sweep a single batched tensor op (`sweep_batch`).
+def fixpoint_tile(lb, ub, *tables, horizon: int, n_alldiff: int = 0,
+                  n_cumulative: int = 0, max_iters: Optional[int] = None,
+                  stop_on_fail: bool = True, step=None):
+    """Per-lane-masked fixpoint loop over a ``[L, V]`` tile (gather form).
 
-    This is the TURBO superstep shape — one propagation launch for all
-    lanes — replacing the per-lane `fixpoint` under `vmap` whose
-    while_loop degenerates to lockstep select-masking anyway.  Per-lane
-    semantics are preserved exactly: a lane participates in a sweep iff
-    its own per-lane cond (changed ∧ it < max_iters ∧ ¬failed) holds, so
-    results, sweep counts and convergence flags are bit-identical to the
-    vmapped form (idempotence of ⊔ makes the frozen-lane masking exact).
+    Pure-array form (no `CompiledModel`) so the Pallas kernel bodies —
+    the unfused fixpoint kernel and the resident search megakernel
+    (DESIGN.md §13) — can run it on VMEM refs; `fixpoint_batch` wraps it
+    for the XLA backends.  A lane participates in a sweep iff its own
+    per-lane cond (changed ∧ it < max_iters ∧ ¬failed) holds, so results,
+    sweep counts and convergence flags are identical across every caller
+    (idempotence of ⊔ makes the frozen-lane masking exact).
+
+    `step` overrides the sweep function (the scatter backend passes its
+    join strategy through here); default is `sweep_tile` on `tables`.
 
     Returns (lb', ub', sweeps[L], converged[L]).
     """
-    step = sweep_scatter_batch if use_scatter else sweep_batch
     L = lb.shape[0]
+    if step is None:
+        def step(lb_, ub_):
+            return sweep_tile(lb_, ub_, *tables, horizon=horizon,
+                              n_alldiff=n_alldiff,
+                              n_cumulative=n_cumulative)
 
     def lane_live(lb_, ub_, changed, it):
         ok = changed
@@ -461,7 +466,7 @@ def fixpoint_batch(cm: CompiledModel, lb: jax.Array, ub: jax.Array,
     def body(st):
         lb_, ub_, changed, it = st
         active = lane_live(lb_, ub_, changed, it)
-        nlb, nub = step(cm, lb_, ub_)
+        nlb, nub = step(lb_, ub_)
         nlb = jnp.where(active[:, None], nlb, lb_)
         nub = jnp.where(active[:, None], nub, ub_)
         ch = jnp.any((nlb != lb_) | (nub != ub_), axis=1)
@@ -472,6 +477,26 @@ def fixpoint_batch(cm: CompiledModel, lb: jax.Array, ub: jax.Array,
     lb, ub, changed, iters = lax.while_loop(cond, body, init)
     converged = jnp.logical_not(changed) | jnp.any(lb > ub, axis=1)
     return lb, ub, iters, converged
+
+
+@partial(jax.jit, static_argnames=("max_iters", "stop_on_fail", "use_scatter"))
+def fixpoint_batch(cm: CompiledModel, lb: jax.Array, ub: jax.Array,
+                   max_iters: Optional[int] = None, stop_on_fail: bool = True,
+                   use_scatter: bool = False):
+    """Lane-batched fixpoint: one `while_loop` over the whole ``[L, V]``
+    store tensor, each sweep a single batched tensor op (`sweep_batch`).
+
+    This is the TURBO superstep shape — one propagation launch for all
+    lanes — replacing the per-lane `fixpoint` under `vmap` whose
+    while_loop degenerates to lockstep select-masking anyway.  The loop
+    itself is `fixpoint_tile`, shared verbatim with the Pallas kernels.
+
+    Returns (lb', ub', sweeps[L], converged[L]).
+    """
+    step = partial(sweep_scatter_batch, cm) if use_scatter else None
+    return fixpoint_tile(lb, ub, *model_tables(cm), **model_statics(cm),
+                         max_iters=max_iters, stop_on_fail=stop_on_fail,
+                         step=step)
 
 
 # --------------------------------------------------------------------------

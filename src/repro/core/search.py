@@ -25,26 +25,33 @@ idempotence (Thm. 2) — correctness never depends on lane divergence.
 Superstep structure (the TURBO shape, DESIGN.md §2.3 and §9): propagation
 is **hoisted out of the per-lane vmap**.  `lanes_step` runs four phases —
 `dispatch_pool` (idle lanes pop the next EPS subproblems off the shared
-per-device pool, DESIGN.md §9), then a vmapped `lane_load` (subproblem
-load + B&B bound tell), then **one lane-batched backend fixpoint over the
-whole [n_lanes, V] store tensor** (`SearchOptions.backend` picks
-gather / scatter / pallas), then a vmapped `lane_commit` (solution
-recording, backtrack-or-branch bookkeeping).  The pool itself comes from
-`eps.decompose` (engine.solve's ``eps_target``); the shared incumbent
-`gbest` each lane prunes against is min-reduced across lanes and mesh
-devices by the engine between supersteps (DESIGN.md §9 bound sharing).
+per-device pool, DESIGN.md §9), then `lane_load_tile` (subproblem load +
+B&B bound tell), then **one lane-batched backend fixpoint over the whole
+[n_lanes, V] store tensor** (`SearchOptions.backend` picks
+gather / scatter / pallas / pallas_resident), then `lane_commit_tile`
+(solution recording, backtrack-or-branch bookkeeping).  The pool itself
+comes from `eps.decompose` (engine.solve's ``eps_target``); the shared
+incumbent `gbest` each lane prunes against is min-reduced across lanes
+and mesh devices by the engine between supersteps (DESIGN.md §9 bound
+sharing).
+
+All four phases are **pure-array tile functions** over ``[L, …]``
+batches (no `CompiledModel`, no vmap — the same discipline as
+`fixpoint.sweep_tile`), so the resident search megakernel
+(`kernels/fixpoint_kernel.search_pallas`, DESIGN.md §13) runs the exact
+same branch/commit math on VMEM refs that the unfused path runs as XLA
+ops — one implementation of the search semantics, two execution
+strategies.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
 from repro.core.compile import CompiledModel
 from repro.core.backend import get_backend
@@ -127,133 +134,170 @@ def init_lanes(cm: CompiledModel, n_lanes: int, opts: SearchOptions) -> LaneStat
     )
 
 
-def dispatch_pool(st: LaneState, pool_head, n_subs: int):
-    """Shared per-device subproblem queue (the paper's dynamic EPS,
-    DESIGN.md §9): fresh lanes pop the next pool indices; when the pool is
-    drained they are marked done.  Replaces static round-robin — no
-    straggler lane can sit on a long private queue while others idle.
-    Runs as phase 0 of every `lanes_step`, so a lane that exhausts its
-    subproblem is replenished on the very next superstep."""
+def dispatch_pool_tile(st: LaneState, pool_head, n_subs: int,
+                       tile_id=0, n_tiles: int = 1):
+    """Shared subproblem queue (the paper's dynamic EPS, DESIGN.md §9):
+    fresh lanes pop the next pool indices; when the pool is drained they
+    are marked done.  Replaces static round-robin — no straggler lane can
+    sit on a long private queue while others idle.  Runs as phase 0 of
+    every superstep, so a lane that exhausts its subproblem is
+    replenished on the very next superstep.
+
+    With ``n_tiles > 1`` (a resident megakernel auto-shrunk into several
+    VMEM grid cells, DESIGN.md §13) the pool is strided across tiles:
+    tile ``t`` owns indices ``t, t + n_tiles, t + 2·n_tiles, …`` and
+    ``pool_head`` is its private cursor into that shard — complete (the
+    shards partition the pool) but without cross-tile work stealing
+    inside a launch.  ``n_tiles == 1`` is exactly the shared-queue
+    semantics of the unfused path."""
     want = st.fresh & ~st.done & (st.next_sub >= n_subs)
     rank = jnp.cumsum(want.astype(jnp.int32)) - 1
-    idx = pool_head + rank
+    slot = pool_head + rank
+    idx = tile_id + n_tiles * slot if n_tiles > 1 else slot
     got = want & (idx < n_subs)
     next_sub = jnp.where(got, idx.astype(jnp.int32), st.next_sub)
     done = st.done | (want & (idx >= n_subs))
+    shard = (n_subs if n_tiles == 1
+             else -((n_subs - tile_id) // -n_tiles))     # ceil shard size
     new_head = jnp.minimum(pool_head + want.astype(jnp.int32).sum(),
-                           n_subs)
+                           shard)
     return st._replace(next_sub=next_sub, done=done), new_head
 
 
-def _apply_path(cm: CompiledModel, root_lb, root_ub, dec_var, dec_val,
-                dec_flip, depth):
-    """Full recomputation: root ⊔ all decision tells, in one scatter."""
-    md = dec_var.shape[0]
+def dispatch_pool(st: LaneState, pool_head, n_subs: int):
+    """Single-queue view of `dispatch_pool_tile` (the unfused path)."""
+    return dispatch_pool_tile(st, pool_head, n_subs)
+
+
+def apply_path_tile(root_lb, root_ub, dec_var, dec_val, dec_flip, depth):
+    """Full recomputation for a ``[L, V]`` tile: root ⊔ all decision
+    tells, in one flat scatter-min/max (per-lane duplicate indices are
+    handled by the associative scatter join).  Pure-array form shared
+    verbatim by the unfused commit and the resident megakernel."""
+    L, V = root_lb.shape
+    md = dec_var.shape[1]
     lvl = jnp.arange(md)
-    on = lvl < depth
-    dt = cm.jdtype
+    on = lvl[None, :] < depth[:, None]
+    dt = root_lb.dtype
     big = jnp.asarray(jnp.iinfo(dt).max // 4, dt)
-    ub_tell = jnp.where(on & ~dec_flip, dec_val, big)           # left: x ≤ m
-    lb_tell = jnp.where(on & dec_flip, dec_val + 1, -big)       # right: x ≥ m+1
-    ub = root_ub.at[dec_var].min(ub_tell)
-    lb = root_lb.at[dec_var].max(lb_tell)
-    return lb, ub
+    ub_tell = jnp.where(on & ~dec_flip, dec_val, big)          # left: x ≤ m
+    lb_tell = jnp.where(on & dec_flip, dec_val + 1, -big)      # right: x ≥ m+1
+    rows = jnp.arange(L, dtype=jnp.int32)[:, None] * V
+    flat = (rows + dec_var.astype(jnp.int32)).reshape(-1)
+    ub = root_ub.reshape(L * V).at[flat].min(ub_tell.reshape(-1))
+    lb = root_lb.reshape(L * V).at[flat].max(lb_tell.reshape(-1))
+    return lb.reshape(L, V), ub.reshape(L, V)
 
 
-def _select_branch(cm: CompiledModel, lb, ub, opts: SearchOptions):
-    """Pick (var, m) for the next decision. Returns (var, m, any_unfixed)."""
-    bv = cm.branch_vars
-    blb, bub = lb[bv], ub[bv]
+def select_branch_tile(lb, ub, branch_vars, *, var_strategy: str,
+                       val_strategy: str):
+    """Pick (var, m) for each lane's next decision over a ``[L, V]``
+    tile.  Returns (var[L], m[L], any_unfixed[L]).  Pure-array form
+    shared verbatim by the unfused commit and the resident megakernel."""
+    bv = branch_vars
+    blb = jnp.take(lb, bv, axis=1)                          # [L, B]
+    bub = jnp.take(ub, bv, axis=1)
     unfixed = blb < bub
     width = bub - blb
-    big = jnp.iinfo(cm.jdtype).max // 4
-    if opts.var_strategy == INPUT_ORDER:
-        pos = jnp.argmax(unfixed)                   # first True
-    elif opts.var_strategy == MIN_DOM:
-        pos = jnp.argmin(jnp.where(unfixed, width, big))
-    elif opts.var_strategy == MIN_LB:
-        pos = jnp.argmin(jnp.where(unfixed, blb, big))
+    big = jnp.iinfo(lb.dtype).max // 4
+    if var_strategy == INPUT_ORDER:
+        pos = jnp.argmax(unfixed, axis=1)                   # first True
+    elif var_strategy == MIN_DOM:
+        pos = jnp.argmin(jnp.where(unfixed, width, big), axis=1)
+    elif var_strategy == MIN_LB:
+        pos = jnp.argmin(jnp.where(unfixed, blb, big), axis=1)
     else:
-        raise ValueError(opts.var_strategy)
-    var = bv[pos]
-    if opts.val_strategy == VAL_MIN:
-        m = lb[var]
-    elif opts.val_strategy == VAL_SPLIT:
-        m = (lb[var] + ub[var]) // 2
+        raise ValueError(var_strategy)
+    var = jnp.take(bv, pos)                                 # [L]
+    idx = var.astype(jnp.int32)[:, None]
+    vlb = jnp.take_along_axis(lb, idx, axis=1)[:, 0]
+    vub = jnp.take_along_axis(ub, idx, axis=1)[:, 0]
+    if val_strategy == VAL_MIN:
+        m = vlb
+    elif val_strategy == VAL_SPLIT:
+        m = (vlb + vub) // 2
     else:
-        raise ValueError(opts.val_strategy)
-    return var, m, jnp.any(unfixed)
+        raise ValueError(val_strategy)
+    return var, m, jnp.any(unfixed, axis=1)
 
 
 class LanePrep(NamedTuple):
-    """Per-lane carry between `lane_load` and `lane_commit` — everything
-    the post-propagation bookkeeping needs besides the propagated store."""
-    lb: jax.Array            # i[V] store with decision + bound tells applied
-    ub: jax.Array            # i[V]
-    root_lb: jax.Array       # i[V]
-    root_ub: jax.Array       # i[V]
-    depth: jax.Array         # i32
-    next_sub: jax.Array      # i32
-    fresh: jax.Array         # bool
-    active: jax.Array        # bool — lane participates in this superstep
+    """Lane-batched carry between `lane_load_tile` and `lane_commit_tile`
+    — everything the post-propagation bookkeeping needs besides the
+    propagated store.  All fields carry a leading ``[L]`` lane axis."""
+    lb: jax.Array            # i[L, V] store with decision + bound tells
+    ub: jax.Array            # i[L, V]
+    root_lb: jax.Array       # i[L, V]
+    root_ub: jax.Array       # i[L, V]
+    depth: jax.Array         # i32[L]
+    next_sub: jax.Array      # i32[L]
+    fresh: jax.Array         # bool[L]
+    active: jax.Array        # bool[L] — lane participates this superstep
 
 
-def lane_load(cm: CompiledModel, subs_lb, subs_ub, opts: SearchOptions,
-              st: LaneState, gbest) -> LanePrep:
-    """Pre-propagation phase of one lane: subproblem load + B&B tell.
+def lane_load_tile(subs_lb, subs_ub, st: LaneState, gbest, *,
+                   obj_var: int) -> LanePrep:
+    """Pre-propagation phase over a lane tile: subproblem load + B&B tell.
 
-    `subs_lb/ub`: the device-local subproblem pool [S, V] (assignment
-    happens in dispatch_pool — the shared per-device queue, TURBO's
-    dynamic EPS; `done` is also decided there).
+    `subs_lb/ub`: the (tile-visible) subproblem pool [S, V] (assignment
+    happens in dispatch_pool_tile — the shared queue, TURBO's dynamic
+    EPS; `done` is also decided there).
     `gbest`: scalar global incumbent bound (already cross-lane/device
-    min'd).  Runs under vmap; propagation itself is hoisted out into the
-    backend's lane-batched fixpoint (see `lanes_step`).
+    min'd).  Pure-array over ``[L, V]`` — no vmap, no `CompiledModel` —
+    so the resident megakernel runs this exact function on VMEM refs.
     """
-    S = subs_lb.shape[0]
-    dt = cm.jdtype
+    S, V = subs_lb.shape
+    dt = subs_lb.dtype
     big = jnp.asarray(jnp.iinfo(dt).max // 4, dt)
 
     # -- 1. load the dispatcher-assigned subproblem when fresh -------------
     can_load = st.next_sub < S
     load = st.fresh & can_load
     sub = jnp.clip(st.next_sub, 0, S - 1)
-    root_lb = jnp.where(load, subs_lb[sub], st.root_lb)
-    root_ub = jnp.where(load, subs_ub[sub], st.root_ub)
-    lb = jnp.where(load, root_lb, st.lb)
-    ub = jnp.where(load, root_ub, st.ub)
+    loadc = load[:, None]
+    root_lb = jnp.where(loadc, jnp.take(subs_lb, sub, axis=0), st.root_lb)
+    root_ub = jnp.where(loadc, jnp.take(subs_ub, sub, axis=0), st.root_ub)
+    lb = jnp.where(loadc, root_lb, st.lb)
+    ub = jnp.where(loadc, root_ub, st.ub)
     depth = jnp.where(load, 0, st.depth)
     next_sub = jnp.where(load, UNASSIGNED, st.next_sub)  # consumed
     fresh = st.fresh & ~load & ~st.done
     active = ~st.done & ~fresh
 
     # -- 2. branch & bound tell ------------------------------------------
-    if cm.obj_var >= 0:
+    if obj_var >= 0:
         inc = jnp.minimum(gbest, st.best_obj)      # global ⊓ own incumbent
         bound = jnp.where(inc < big, inc - 1, big)
-        ub = ub.at[cm.obj_var].min(jnp.where(active, bound, big))
+        tell = jnp.where(active, bound, big)                       # [L]
+        vcols = jnp.arange(V)
+        ub = jnp.where(vcols[None, :] == obj_var,
+                       jnp.minimum(ub, tell[:, None]), ub)
     return LanePrep(lb=lb, ub=ub, root_lb=root_lb, root_ub=root_ub,
                     depth=depth, next_sub=next_sub, fresh=fresh,
                     active=active)
 
 
-def lane_commit(cm: CompiledModel, opts: SearchOptions, st: LaneState,
-                pre: LanePrep, lb, ub, sweeps, converged) -> LaneState:
-    """Post-propagation phase of one lane: record / backtrack-or-branch.
-
-    `lb`, `ub`, `sweeps`, `converged` are this lane's slice of the batched
-    backend fixpoint.  Runs under vmap.
-    """
-    dt = cm.jdtype
+def lane_commit_tile(st: LaneState, pre: LanePrep, lb, ub, sweeps,
+                     converged, branch_vars, *, obj_var: int,
+                     var_strategy: str, val_strategy: str) -> LaneState:
+    """Post-propagation phase over a lane tile: record / backtrack-or-
+    branch.  `lb`, `ub`, `sweeps`, `converged` are the batched backend
+    fixpoint outputs.  Pure-array over ``[L, V]`` (shared verbatim by the
+    resident megakernel); the path depth limit is the static ``MD`` of
+    the decision arrays."""
+    L, V = lb.shape
+    md = st.dec_var.shape[1]
+    dt = lb.dtype
     big = jnp.asarray(jnp.iinfo(dt).max // 4, dt)
     root_lb, root_ub = pre.root_lb, pre.root_ub
     depth, next_sub = pre.depth, pre.next_sub
     fresh, active, done = pre.fresh, pre.active, st.done
 
-    failed = jnp.any(lb > ub)
+    failed = jnp.any(lb > ub, axis=1)
     # a fully-fixed store is only a SOLUTION at a (per-lane) fixed point:
     # with capped sweeps (§Perf H1), unconverged lanes keep propagating on
     # the next superstep instead of branching/recording (soundness guard).
-    solved = active & converged & ~failed & jnp.all(lb == ub)
+    solved = active & converged & ~failed & jnp.all(lb == ub, axis=1)
     failed = active & failed
 
     # a node = one propagate-to-completion event (failed counts; an
@@ -264,55 +308,58 @@ def lane_commit(cm: CompiledModel, opts: SearchOptions, st: LaneState,
     n_sweeps = st.n_sweeps + jnp.asarray(sweeps, jnp.int32)
 
     # -- 3. record incumbent ------------------------------------------------
-    if cm.obj_var >= 0:
-        better = solved & (lb[cm.obj_var] < st.best_obj)
+    if obj_var >= 0:
+        better = solved & (lb[:, obj_var] < st.best_obj)
+        best_obj = jnp.where(better, lb[:, obj_var], st.best_obj)
     else:
         better = solved & ~st.has_sol
-    best_obj = jnp.where(better, lb[cm.obj_var] if cm.obj_var >= 0 else big,
-                         st.best_obj)
-    best_sol = jnp.where(better, lb, st.best_sol)
+        best_obj = jnp.where(better, big, st.best_obj)
+    best_sol = jnp.where(better[:, None], lb, st.best_sol)
     has_sol = st.has_sol | solved
 
     # -- 4. backtrack or branch ---------------------------------------------
     bt = failed | solved
-    lvl = jnp.arange(opts.max_depth)
-    open_mask = (~st.dec_flip) & (lvl < depth)
-    has_open = jnp.any(open_mask)
-    bt_level = jnp.max(jnp.where(open_mask, lvl, -1))
+    lvl = jnp.arange(md)
+    open_mask = (~st.dec_flip) & (lvl[None, :] < depth[:, None])
+    has_open = jnp.any(open_mask, axis=1)
+    bt_level = jnp.max(jnp.where(open_mask, lvl[None, :], -1), axis=1)
     exhausted = active & bt & ~has_open
 
     do_bt = active & bt & has_open
     # pop everything deeper than bt_level, flip bt_level to its right branch
     dec_flip = jnp.where(
-        do_bt,
-        (st.dec_flip & (lvl < bt_level)) | (lvl == bt_level),
+        do_bt[:, None],
+        (st.dec_flip & (lvl[None, :] < bt_level[:, None]))
+        | (lvl[None, :] == bt_level[:, None]),
         st.dec_flip)
-    depth_bt = bt_level + 1
+    depth_bt = (bt_level + 1).astype(jnp.int32)
 
     # full recomputation for backtracking lanes
-    rlb, rub = _apply_path(cm, root_lb, root_ub, st.dec_var, st.dec_val,
-                           dec_flip, depth_bt)
+    rlb, rub = apply_path_tile(root_lb, root_ub, st.dec_var, st.dec_val,
+                               dec_flip, depth_bt)
 
     # branching lanes (only at per-lane fixed points: unconverged lanes
     # do nothing this superstep and propagate further on the next)
-    var, m, any_unfixed = _select_branch(cm, lb, ub, opts)
+    var, m, any_unfixed = select_branch_tile(
+        lb, ub, branch_vars, var_strategy=var_strategy,
+        val_strategy=val_strategy)
     do_branch = active & ~bt & converged & any_unfixed
-    overflow = do_branch & (depth >= opts.max_depth)
+    overflow = do_branch & (depth >= md)
     do_branch = do_branch & ~overflow
-    dec_var = jnp.where(do_branch,
-                        st.dec_var.at[jnp.clip(depth, 0, opts.max_depth - 1)]
-                        .set(var.astype(jnp.int32)), st.dec_var)
-    dec_val = jnp.where(do_branch,
-                        st.dec_val.at[jnp.clip(depth, 0, opts.max_depth - 1)]
-                        .set(m), st.dec_val)
-    dec_flip = jnp.where(do_branch,
-                         dec_flip.at[jnp.clip(depth, 0, opts.max_depth - 1)]
-                         .set(False), dec_flip)
-    blb, bub = lb, ub.at[var].min(jnp.where(do_branch, m, big))  # left: x ≤ m
+    at_lvl = lvl[None, :] == jnp.clip(depth, 0, md - 1)[:, None]  # [L, MD]
+    upd = do_branch[:, None] & at_lvl
+    dec_var = jnp.where(upd, var.astype(jnp.int32)[:, None], st.dec_var)
+    dec_val = jnp.where(upd, m[:, None], st.dec_val)
+    dec_flip = jnp.where(upd, False, dec_flip)
+    vcols = jnp.arange(V)
+    btell = jnp.where(do_branch, m, big)                          # [L]
+    blb = lb
+    bub = jnp.where(vcols[None, :] == var[:, None],               # left: x ≤ m
+                    jnp.minimum(ub, btell[:, None]), ub)
 
     # -- 5. commit per-lane outcome ------------------------------------------
-    new_lb = jnp.where(do_bt, rlb, blb)
-    new_ub = jnp.where(do_bt, rub, bub)
+    new_lb = jnp.where(do_bt[:, None], rlb, blb)
+    new_ub = jnp.where(do_bt[:, None], rub, bub)
     new_depth = jnp.where(do_bt, depth_bt,
                           jnp.where(do_branch, depth + 1, depth))
     fresh = fresh | exhausted | overflow
@@ -330,22 +377,26 @@ def lane_commit(cm: CompiledModel, opts: SearchOptions, st: LaneState,
 def lanes_step(cm: CompiledModel, subs_lb, subs_ub, opts: SearchOptions,
                st: LaneState, gbest, pool_head):
     """One superstep over all lanes: pool dispatch (idle-lane
-    replenishment) → vmapped load → **one** lane-batched backend fixpoint
-    over the whole [n_lanes, V] store tensor → vmapped commit.  Only the
-    bookkeeping is vmapped; propagation is a single batched call (one
-    kernel invocation per superstep — the TURBO shape, DESIGN.md §9).
+    replenishment) → tile load → **one** lane-batched backend fixpoint
+    over the whole [n_lanes, V] store tensor → tile commit.  Every phase
+    is a pure-array tile function; propagation is a single batched call
+    (one kernel invocation per superstep — the TURBO shape, DESIGN.md
+    §9).  The `pallas_resident` backend fuses K of these supersteps into
+    one kernel launch by running the same tile functions inside Pallas
+    (DESIGN.md §13).
 
     `pool_head` is the device-local cursor into the EPS pool; the updated
     cursor is returned alongside the new lane state.
     """
     st, pool_head = dispatch_pool(st, pool_head, subs_lb.shape[0])
-    pre = jax.vmap(partial(lane_load, cm, subs_lb, subs_ub, opts),
-                   in_axes=(0, None))(st, gbest)
+    pre = lane_load_tile(subs_lb, subs_ub, st, gbest, obj_var=cm.obj_var)
     backend = get_backend(opts.backend, **dict(opts.backend_opts))
     lb, ub, sweeps, converged = backend.fixpoint_batch(
         cm, pre.lb, pre.ub, max_iters=opts.max_fixpoint_iters)
-    st = jax.vmap(partial(lane_commit, cm, opts))(
-        st, pre, lb, ub, sweeps, converged)
+    st = lane_commit_tile(st, pre, lb, ub, sweeps, converged,
+                          cm.branch_vars, obj_var=cm.obj_var,
+                          var_strategy=opts.var_strategy,
+                          val_strategy=opts.val_strategy)
     return st, pool_head
 
 

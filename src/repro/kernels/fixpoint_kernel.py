@@ -1,104 +1,99 @@
-"""Pallas TPU kernel: the whole propagation fixpoint in VMEM.
+"""Pallas TPU kernels: propagation fixpoint and resident search in VMEM.
 
 GPU→TPU mapping (DESIGN.md §2): one grid cell ↔ one TURBO CUDA block ↔ a
-*tile of lanes* whose stores live in VMEM for the entire fixpoint loop —
-the analogue of TURBO keeping both stores in the SM's shared memory.  The
+*tile of lanes* whose stores live in VMEM for the entire kernel — the
+analogue of TURBO keeping both stores in the SM's shared memory.  The
 propagator/occurrence tables are broadcast to every grid cell (index_map
 pins them to block 0), mirroring the constant problem tables in GPU
 constant/global memory.
 
-The kernel body is the *eventless sweep* over the typed propagator table
-(DESIGN.md §12): every bank's candidate bounds are computed as dense
-tensor ops on the MXU/VPU ([P, K] linear tightenings, [A, N³]
-Hall-interval alldifferent checks, [C, T, H] cumulative time-tables),
-then each variable gathers the min/max over its per-bank occurrence
-lists ([V, D]-style gathers — TPU-native joins, no atomics).  The sweep
-itself is `fixpoint.sweep_tile`, the **same** kind-dispatched function
-the XLA gather backend runs — one implementation of the semantics, two
-execution strategies.  A `lax.while_loop` iterates
-sweeps until no bound changes or a domain empties — fixpoint detection is
-one reduction, standing in for the paper's has_changed[3] +
-__syncthreads().
+Two kernels share one semantics implementation:
 
-VMEM budget (per grid cell, int32; see the table in DESIGN.md §2): stores
-2·TL·V, tables ≈ 2·P·K + 2·V·D + 4·V; with the j30-class sizes (V≈3k,
-P≈5k, K=32, D≈128) that is ≈ 2.1 MB of tables + 24 KB/lane — comfortably
-inside the ~16 MB VMEM of a TPU v5e core with TL up to ~512 lanes.
+* `fixpoint_pallas` — the *unfused* propagation kernel: one grid cell
+  iterates its lane tile to the least fixed point.  The loop body is
+  `fixpoint.fixpoint_tile`, the **same** per-lane-masked sweep loop the
+  XLA gather backend runs — one implementation, two execution
+  strategies.
+
+* `search_pallas` — the *resident search megakernel* (DESIGN.md §13):
+  the whole four-phase superstep — EPS pool dispatch, subproblem load +
+  B&B bound tell, fixpoint sweeps, solution/backtrack/branch commit —
+  fused into one `pl.pallas_call` that keeps every piece of lane state
+  (both stores, the decision path, status flags, the pool cursor and the
+  tile-best bound) resident in VMEM across ``supersteps`` supersteps,
+  via a `lax.fori_loop` over `search.lane_load_tile` /
+  `fixpoint.fixpoint_tile` / `search.lane_commit_tile` — the *same*
+  pure-array tile functions `search.lanes_step` composes as separate XLA
+  dispatches.  The host is re-entered only once per K supersteps (global
+  best all-reduce, incumbent streaming, pool refill — see
+  `core/api._run_chunk`).
+
+VMEM budget: `vmem_budget` promotes the DESIGN.md §2 table into code —
+per-grid-cell bytes for tables, stores, resident search state and the
+dominant sweep intermediates — and `fixpoint_pallas`/`search_pallas`
+auto-shrink their lane tile (with a warning) instead of dying in a
+Mosaic OOM.
 
 Validated in interpret mode on CPU (this container has no TPU); the ops
-used (take/gather along axis 0, elementwise, while_loop) lower on TPU
-Pallas for int32.
+used (take/gather along axis 0, elementwise, while_loop/fori_loop/cond)
+lower on TPU Pallas for int32.  The one TPU caveat: the decision-path
+scatter in `search.apply_path_tile` lowers through
+`lax.scatter_min/max`, which Mosaic supports only via serialization —
+acceptable because it touches [L, MD] elements, not [L, V] stores.
 """
 
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from repro.core.fixpoint import sweep_tile
+from repro.core.fixpoint import fixpoint_tile
+from repro.core import search as S
+
+# TPU v5e per-core VMEM (DESIGN.md §2); the budget leaves headroom for
+# double-buffering and compiler temporaries by charging the dominant
+# sweep intermediates explicitly instead of reserving a blanket margin.
+VMEM_LIMIT_BYTES = 16 * 1024 * 1024
+
+N_TABLES = 19        # positional args of fixpoint.sweep_tile, in order
+N_STATE = len(S.LaneState._fields)                                # 19
+_BOOL_FIELDS = ("dec_flip", "fresh", "done", "incomplete", "has_sol")
 
 
-def _fixpoint_kernel(vidx_ref, coef_ref, rhs_ref, bidx_ref, occp_ref,
-                     occs_ref, adv_ref, ado_ref, adm_ref, adoi_ref,
-                     adop_ref, cus_ref, cud_ref, cuq_ref, cuc_ref,
-                     cuoi_ref, cuop_ref, boxlo_ref, boxhi_ref,
-                     lb_ref, ub_ref,
-                     out_lb_ref, out_ub_ref, sweeps_ref, conv_ref,
-                     *, max_sweeps: int, horizon: int, n_alldiff: int,
-                     n_cumulative: int):
-    lb = lb_ref[...]
-    ub = ub_ref[...]
-    tables = (vidx_ref[...], coef_ref[...], rhs_ref[...], bidx_ref[...],
-              occp_ref[...], occs_ref[...],
-              adv_ref[...], ado_ref[...], adm_ref[...], adoi_ref[...],
-              adop_ref[...], cus_ref[...], cud_ref[...], cuq_ref[...],
-              cuc_ref[...], cuoi_ref[...], cuop_ref[...],
-              boxlo_ref[...], boxhi_ref[...])
-
-    def cond(st):
-        lb_, ub_, changed, it = st
-        live = jnp.logical_not(jnp.all(jnp.any(lb_ > ub_, axis=1)))
-        return changed & (it < max_sweeps) & live
-
-    def body(st):
-        lb_, ub_, _, it = st
-        nlb, nub = sweep_tile(lb_, ub_, *tables, horizon=horizon,
-                              n_alldiff=n_alldiff,
-                              n_cumulative=n_cumulative)
-        changed = jnp.any((nlb != lb_) | (nub != ub_))
-        return nlb, nub, changed, it + 1
-
-    lb, ub, changed, it = lax.while_loop(
-        cond, body, (lb, ub, jnp.asarray(True), jnp.asarray(0, jnp.int32)))
-    out_lb_ref[...] = lb
-    out_ub_ref[...] = ub
-    sweeps_ref[...] = jnp.full(sweeps_ref.shape, it, jnp.int32)
-    # per-lane convergence: failure is definitive; otherwise the tile-wide
-    # no-change flag (conservative for lanes that individually fixed early,
-    # which is sound — search just keeps them propagating a no-op sweep)
-    failed = jnp.any(lb > ub, axis=1)
-    conv_ref[...] = (jnp.logical_not(changed) | failed).astype(jnp.int32)
+def _nbytes(a) -> int:
+    return int(a.size) * a.dtype.itemsize
 
 
-def fixpoint_pallas(cm, lb, ub, *, lane_tile: int = 8,
-                    max_sweeps: int = 16384, interpret: bool = True):
-    """Run the VMEM fixpoint kernel over lane-batched stores [L, V].
+def vmem_budget(cm, lane_tile: int, *, resident: bool = False,
+                max_depth: int = 0, pool_size: int = 0) -> dict:
+    """Per-grid-cell VMEM byte footprint (the DESIGN.md §2/§13 budget
+    table, in code).
 
-    Grid = ceil(L / lane_tile); each cell iterates its tile to fixpoint
-    independently (cells stop early when all their lanes failed).
-    Returns (lb', ub', sweeps[L], converged[L]).
+    Returns a breakdown dict with a ``total`` key:
+
+    * ``tables``  — the broadcast propagator/occurrence banks;
+    * ``stores``  — lane-tile store I/O (in + out);
+    * ``state``   — resident-only: the full `LaneState` beyond the
+      stores (decision path [TL, MD]·3, best_sol [TL, V], per-lane
+      scalars), in + out, plus the broadcast EPS pool [S, V]·2;
+    * ``scratch`` — the dominant sweep intermediates per lane: the
+      [P1, K+1] linear candidate tensors, the [A1, N³] Hall-interval
+      tensors and the [C1, T, H] time-table profile (conservative
+      coefficient per bank), plus the [V, D] occurrence gathers.
+
+    `fixpoint_pallas`/`search_pallas` compare ``total`` against
+    `VMEM_LIMIT_BYTES` and halve the lane tile instead of handing Mosaic
+    an un-allocatable kernel.
     """
-    L, V = lb.shape
-    pad = (-L) % lane_tile
-    if pad:
-        lb = jnp.concatenate([lb, jnp.broadcast_to(lb[-1:], (pad, V))])
-        ub = jnp.concatenate([ub, jnp.broadcast_to(ub[-1:], (pad, V))])
-    Lp = lb.shape[0]
-    grid = (Lp // lane_tile,)
+    it = jnp.dtype(cm.jdtype).itemsize
+    V = cm.n_vars
+    from repro.core.fixpoint import model_tables
+    tables = sum(_nbytes(a) for a in model_tables(cm))
 
     P1, K = cm.vidx.shape
     D = cm.occ_prop.shape[1]
@@ -106,9 +101,126 @@ def fixpoint_pallas(cm, lb, ub, *, lane_tile: int = 8,
     Dad = cm.ad_occ_inst.shape[1]
     C1, T = cm.cu_svar.shape
     Dcu = cm.cu_occ_inst.shape[1]
-    dt = cm.jdtype
+    per_lane = 8 * P1 * (K + 1) + 2 * V * (D + Dad + Dcu)
+    if cm.n_alldiff:
+        per_lane += 3 * A1 * N ** 3
+    if cm.n_cumulative:
+        per_lane += 4 * C1 * T * cm.horizon
+    scratch = lane_tile * per_lane * it
 
+    stores = 4 * lane_tile * V * it          # lb/ub in + out
+    state = 0
+    if resident:
+        tables += _nbytes(cm.branch_vars)
+        # root stores + best_sol (in+out), decision path, lane scalars
+        state += 2 * (3 * lane_tile * V * it          # root_lb/ub, best_sol
+                      + 3 * lane_tile * max_depth * 4  # dec_var/val/flip
+                      + 12 * lane_tile * 4)            # flags + counters
+        state += 2 * pool_size * V * it                # broadcast EPS pool
+    else:
+        stores += 2 * lane_tile * 4                    # sweeps/conv out
+    total = tables + stores + state + scratch
+    return dict(tables=tables, stores=stores, state=state, scratch=scratch,
+                total=total)
+
+
+def fit_lane_tile(cm, lane_tile: int, n_lanes: int, *,
+                  resident: bool = False, max_depth: int = 0,
+                  pool_size: int = 0, limit_bytes: int = None) -> int:
+    """Clamp `lane_tile` to `n_lanes` and halve it until the
+    `vmem_budget` fits `limit_bytes` (default `VMEM_LIMIT_BYTES`,
+    warning on each shrink); raise a clear error when even a single
+    lane per cell does not fit."""
+    if limit_bytes is None:
+        limit_bytes = VMEM_LIMIT_BYTES
+    kernel = "search_pallas" if resident else "fixpoint_pallas"
+    tile = max(1, min(lane_tile, n_lanes))
+    while True:
+        b = vmem_budget(cm, tile, resident=resident, max_depth=max_depth,
+                        pool_size=pool_size)
+        if b["total"] <= limit_bytes:
+            return tile
+        if tile == 1:
+            raise ValueError(
+                f"{kernel}: model {cm.name or '<unnamed>'} does not fit "
+                f"VMEM even at lane_tile=1: "
+                f"{b['total'] / 2**20:.1f} MB needed "
+                f"(tables {b['tables'] / 2**20:.1f} MB, scratch "
+                f"{b['scratch'] / 2**20:.1f} MB, state "
+                f"{b['state'] / 2**20:.1f} MB) vs "
+                f"{limit_bytes / 2**20:.1f} MB VMEM — shrink the model "
+                f"(horizon/occurrence widths) or use the gather backend")
+        new = max(1, tile // 2)
+        warnings.warn(
+            f"{kernel}: lane_tile={tile} needs {b['total'] / 2**20:.1f} MB "
+            f"of VMEM (> {limit_bytes / 2**20:.1f} MB); shrinking to "
+            f"{new}", stacklevel=3)
+        tile = new
+
+
+# --------------------------------------------------------------------------
+# Unfused propagation kernel (one fixpoint per launch)
+# --------------------------------------------------------------------------
+
+def _fixpoint_kernel(*refs, max_sweeps: int, horizon: int, n_alldiff: int,
+                     n_cumulative: int):
+    table_refs = refs[:N_TABLES]
+    lb_ref, ub_ref = refs[N_TABLES], refs[N_TABLES + 1]
+    out_lb_ref, out_ub_ref, sweeps_ref, conv_ref = refs[N_TABLES + 2:]
+    tables = tuple(r[...] for r in table_refs)
+    lb, ub, sweeps, conv = fixpoint_tile(
+        lb_ref[...], ub_ref[...], *tables, horizon=horizon,
+        n_alldiff=n_alldiff, n_cumulative=n_cumulative,
+        max_iters=max_sweeps)
+    out_lb_ref[...] = lb
+    out_ub_ref[...] = ub
+    sweeps_ref[...] = sweeps
+    conv_ref[...] = conv.astype(jnp.int32)
+
+
+def _table_specs(cm):
+    """BlockSpecs broadcasting the full propagator banks to every cell."""
     whole = lambda *shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))  # noqa: E731
+    P1, K = cm.vidx.shape
+    D = cm.occ_prop.shape[1]
+    A1, N = cm.ad_vars.shape
+    Dad = cm.ad_occ_inst.shape[1]
+    C1, T = cm.cu_svar.shape
+    Dcu = cm.cu_occ_inst.shape[1]
+    V = cm.n_vars
+    return [
+        whole(P1, K), whole(P1, K), whole(P1), whole(P1),
+        whole(V, D), whole(V, D),
+        whole(A1, N), whole(A1, N), whole(A1, N),
+        whole(V, Dad), whole(V, Dad),
+        whole(C1, T), whole(C1, T), whole(C1, T), whole(C1),
+        whole(V, Dcu), whole(V, Dcu),
+        whole(V), whole(V),
+    ]
+
+
+def fixpoint_pallas(cm, lb, ub, *, lane_tile: int = 8,
+                    max_sweeps: int = 16384, interpret: bool = True):
+    """Run the VMEM fixpoint kernel over lane-batched stores [L, V].
+
+    Grid = ceil(L / lane_tile); each cell iterates its tile to fixpoint
+    with the shared per-lane-masked loop (`fixpoint.fixpoint_tile`), so
+    sweep counts and convergence flags are bit-identical to the XLA
+    backends.  The tile auto-shrinks (with a warning) when the
+    `vmem_budget` exceeds VMEM.  Returns (lb', ub', sweeps[L],
+    converged[L]).
+    """
+    from repro.core.fixpoint import model_tables
+    L, V = lb.shape
+    lane_tile = fit_lane_tile(cm, lane_tile, L)
+    pad = (-L) % lane_tile
+    if pad:
+        lb = jnp.concatenate([lb, jnp.broadcast_to(lb[-1:], (pad, V))])
+        ub = jnp.concatenate([ub, jnp.broadcast_to(ub[-1:], (pad, V))])
+    Lp = lb.shape[0]
+    grid = (Lp // lane_tile,)
+
+    dt = cm.jdtype
     tiled = pl.BlockSpec((lane_tile, V), lambda i: (i, 0))
     lane1d = pl.BlockSpec((lane_tile,), lambda i: (i,))
 
@@ -117,16 +229,7 @@ def fixpoint_pallas(cm, lb, ub, *, lane_tile: int = 8,
                           horizon=cm.horizon, n_alldiff=cm.n_alldiff,
                           n_cumulative=cm.n_cumulative),
         grid=grid,
-        in_specs=[
-            whole(P1, K), whole(P1, K), whole(P1), whole(P1),
-            whole(V, D), whole(V, D),
-            whole(A1, N), whole(A1, N), whole(A1, N),
-            whole(V, Dad), whole(V, Dad),
-            whole(C1, T), whole(C1, T), whole(C1, T), whole(C1),
-            whole(V, Dcu), whole(V, Dcu),
-            whole(V), whole(V),
-            tiled, tiled,
-        ],
+        in_specs=_table_specs(cm) + [tiled, tiled],
         out_specs=[tiled, tiled, lane1d, lane1d],
         out_shape=[
             jax.ShapeDtypeStruct((Lp, V), dt),
@@ -135,9 +238,204 @@ def fixpoint_pallas(cm, lb, ub, *, lane_tile: int = 8,
             jax.ShapeDtypeStruct((Lp,), jnp.int32),
         ],
         interpret=interpret,
-    )(cm.vidx, cm.coef, cm.rhs, cm.bidx, cm.occ_prop, cm.occ_slot,
-      cm.ad_vars, cm.ad_offs, cm.ad_mask, cm.ad_occ_inst, cm.ad_occ_pos,
-      cm.cu_svar, cm.cu_dur, cm.cu_dem, cm.cu_cap,
-      cm.cu_occ_inst, cm.cu_occ_pos,
-      cm.box_lo, cm.box_hi, lb, ub)
+    )(*model_tables(cm), lb, ub)
     return out_lb[:L], out_ub[:L], sweeps[:L], conv[:L].astype(bool)
+
+
+# --------------------------------------------------------------------------
+# Resident search megakernel (K supersteps per launch, DESIGN.md §13)
+# --------------------------------------------------------------------------
+
+def _pack_state(st: S.LaneState):
+    """LaneState → kernel I/O arrays (bools as int32, field order)."""
+    return tuple(
+        getattr(st, f).astype(jnp.int32) if f in _BOOL_FIELDS
+        else getattr(st, f)
+        for f in S.LaneState._fields)
+
+
+def _unpack_state(arrays) -> S.LaneState:
+    return S.LaneState(*(
+        a != 0 if f in _BOOL_FIELDS else a
+        for f, a in zip(S.LaneState._fields, arrays)))
+
+
+def _search_kernel(*refs, supersteps: int, max_sweeps: int, horizon: int,
+                   n_alldiff: int, n_cumulative: int, obj_var: int,
+                   var_strategy: str, val_strategy: str,
+                   stop_on_first: bool, max_fixpoint_iters, n_tiles: int):
+    """K fused supersteps over one VMEM-resident lane tile.
+
+    The body composes the *same* tile functions the unfused path runs
+    as separate XLA dispatches — `dispatch_pool_tile` → `lane_load_tile`
+    → `fixpoint_tile` → `lane_commit_tile` — inside a `fori_loop`, with
+    each superstep guarded by the derived global-done flag (`done` and
+    `has_sol` are monotone, so the carried `gdone` of the host loop is
+    recomputable from state: a stopped tile runs K identity steps,
+    keeping the launch idempotent).
+    """
+    k = N_TABLES
+    tables = tuple(r[...] for r in refs[:k])
+    bv = refs[k][...]
+    subs_lb = refs[k + 1][...]
+    subs_ub = refs[k + 2][...]
+    st = _unpack_state([r[...] for r in refs[k + 3:k + 3 + N_STATE]])
+    gbest_ref, it_ref, head_ref = refs[k + 3 + N_STATE:k + 6 + N_STATE]
+    outs = refs[k + 6 + N_STATE:]
+    out_state = outs[:N_STATE]
+    out_gbest_ref, out_head_ref, out_it_ref, out_stop_ref = outs[N_STATE:]
+
+    gbest = gbest_ref[0]
+    it = it_ref[0]
+    head = head_ref[0]
+    n_subs = subs_lb.shape[0]
+    tile_id = pl.program_id(0) if n_tiles > 1 else 0
+    cap = max_sweeps if max_fixpoint_iters is None else max_fixpoint_iters
+
+    def gdone_of(st):
+        g = jnp.all(st.done)
+        if stop_on_first:
+            g = g | jnp.any(st.has_sol)
+        return g
+
+    def superstep(_, carry):
+        st, gbest, it, head = carry
+
+        def run(c):
+            st, gbest, it, head = c
+            st, head = S.dispatch_pool_tile(st, head, n_subs,
+                                            tile_id=tile_id,
+                                            n_tiles=n_tiles)
+            pre = S.lane_load_tile(subs_lb, subs_ub, st, gbest,
+                                   obj_var=obj_var)
+            lb, ub, sweeps, conv = fixpoint_tile(
+                pre.lb, pre.ub, *tables, horizon=horizon,
+                n_alldiff=n_alldiff, n_cumulative=n_cumulative,
+                max_iters=cap)
+            st = S.lane_commit_tile(st, pre, lb, ub, sweeps, conv, bv,
+                                    obj_var=obj_var,
+                                    var_strategy=var_strategy,
+                                    val_strategy=val_strategy)
+            gbest = jnp.minimum(gbest, jnp.min(st.best_obj))
+            return st, gbest, it + 1, head
+
+        return lax.cond(gdone_of(st), lambda c: c, run,
+                        (st, gbest, it, head))
+
+    st, gbest, it, head = lax.fori_loop(0, supersteps, superstep,
+                                        (st, gbest, it, head))
+    for ref, val in zip(out_state, _pack_state(st)):
+        ref[...] = val
+    out_gbest_ref[...] = jnp.reshape(gbest, (1,))
+    out_head_ref[...] = jnp.reshape(head, (1,)).astype(jnp.int32)
+    out_it_ref[...] = jnp.reshape(it, (1,)).astype(jnp.int32)
+    out_stop_ref[...] = jnp.reshape(gdone_of(st), (1,)).astype(jnp.int32)
+
+
+def _pad_lanes(st: S.LaneState, pad: int, dt) -> S.LaneState:
+    """Append `pad` inert lanes (done, no subproblem, neutral incumbent)
+    so the lane axis tiles evenly; sliced back off after the launch."""
+    big = jnp.asarray(jnp.iinfo(dt).max // 4, dt)
+
+    def ext(a, fill):
+        tail = jnp.full((pad,) + a.shape[1:], fill, a.dtype)
+        return jnp.concatenate([a, tail])
+
+    fills = dict(next_sub=S.UNASSIGNED, done=True, best_obj=big)
+    return S.LaneState(*(
+        ext(getattr(st, f), fills.get(f, 0))
+        for f in S.LaneState._fields))
+
+
+def search_pallas(cm, subs_lb, subs_ub, st: S.LaneState, gbest, it,
+                  pool_head, *, supersteps: int = 16, lane_tile: int = 0,
+                  max_sweeps: int = 16384, max_fixpoint_iters=None,
+                  var_strategy: str = S.INPUT_ORDER,
+                  val_strategy: str = S.VAL_MIN,
+                  stop_on_first: bool = False, interpret: bool = True):
+    """Launch the resident search megakernel: K = `supersteps` fused
+    supersteps with all lane state held in VMEM (DESIGN.md §13).
+
+    ``lane_tile=0`` (the default, and the bit-parity mode) puts ALL
+    lanes in one grid cell so the EPS pool is one shared queue —
+    exactly `search.lanes_step`'s dispatch semantics.  A smaller tile
+    (set explicitly or by VMEM auto-shrink) splits lanes over
+    ``n_tiles`` cells with the pool strided across them (cell t owns
+    pool indices t, t+NT, …) — still sound and complete, but a
+    different (documented) dispatch trajectory; `pool_head` then
+    carries one cursor per cell.
+
+    Arguments mirror one `_run_chunk` carry: `st` the LaneState,
+    `gbest` the scalar global bound, `it` the scalar superstep counter,
+    `pool_head` the ``[n_tiles]`` pool cursor(s).  Returns
+    ``(st', gbest', it', pool_head', stopped)`` where `stopped` is the
+    derived global-done flag (all lanes drained, or first solution
+    under `stop_on_first`) — the host chunk scheduler ORs it into
+    `gdone` and stops relaunching.
+    """
+    L, V = st.lb.shape
+    MD = st.dec_var.shape[1]
+    Spool = subs_lb.shape[0]
+    dt = cm.jdtype
+
+    tile = L if lane_tile in (0, None) else lane_tile
+    tile = fit_lane_tile(cm, tile, L, resident=True, max_depth=MD,
+                         pool_size=Spool)
+    pad = (-L) % tile
+    if pad:
+        st = _pad_lanes(st, pad, dt)
+    Lp = L + pad
+    n_tiles = Lp // tile
+    pool_head = jnp.broadcast_to(jnp.asarray(pool_head, jnp.int32),
+                                 (n_tiles,))
+
+    whole = lambda *shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))  # noqa: E731
+    cell1 = pl.BlockSpec((1,), lambda i: (i,))
+
+    def state_spec(f):
+        a = getattr(st, f)
+        if a.ndim == 2:
+            return pl.BlockSpec((tile, a.shape[1]), lambda i: (i, 0))
+        return pl.BlockSpec((tile,), lambda i: (i,))
+
+    def state_shape(f):
+        a = getattr(st, f)
+        d = jnp.int32 if a.dtype == jnp.bool_ else a.dtype
+        return jax.ShapeDtypeStruct(a.shape, d)
+
+    fields = S.LaneState._fields
+    in_specs = (_table_specs(cm)
+                + [whole(int(cm.branch_vars.shape[0])),
+                   whole(Spool, V), whole(Spool, V)]
+                + [state_spec(f) for f in fields]
+                + [whole(1), whole(1), cell1])
+    out_specs = ([state_spec(f) for f in fields]
+                 + [cell1, cell1, cell1, cell1])
+    out_shape = ([state_shape(f) for f in fields]
+                 + [jax.ShapeDtypeStruct((n_tiles,), dt)]
+                 + [jax.ShapeDtypeStruct((n_tiles,), jnp.int32)] * 3)
+
+    from repro.core.fixpoint import model_tables
+    outs = pl.pallas_call(
+        functools.partial(
+            _search_kernel, supersteps=supersteps, max_sweeps=max_sweeps,
+            horizon=cm.horizon, n_alldiff=cm.n_alldiff,
+            n_cumulative=cm.n_cumulative, obj_var=cm.obj_var,
+            var_strategy=var_strategy, val_strategy=val_strategy,
+            stop_on_first=stop_on_first,
+            max_fixpoint_iters=max_fixpoint_iters, n_tiles=n_tiles),
+        grid=(n_tiles,),
+        in_specs=in_specs, out_specs=out_specs, out_shape=out_shape,
+        interpret=interpret,
+    )(*model_tables(cm), cm.branch_vars, subs_lb, subs_ub,
+      *_pack_state(st),
+      jnp.reshape(jnp.asarray(gbest, dt), (1,)),
+      jnp.reshape(jnp.asarray(it, jnp.int32), (1,)),
+      pool_head)
+
+    st_out = _unpack_state(outs[:N_STATE])
+    if pad:
+        st_out = S.LaneState(*(a[:L] for a in st_out))
+    gbest_out, head_out, it_out, stop_out = outs[N_STATE:]
+    return (st_out, jnp.min(gbest_out), jnp.max(it_out),
+            head_out.astype(jnp.int32), jnp.all(stop_out != 0))

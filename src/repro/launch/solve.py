@@ -56,8 +56,13 @@ def main():
                     help="propagation backend for the superstep fixpoint "
                          "(core/backend.py; pallas = VMEM kernel, "
                          "interpret-mode on CPU)")
-    ap.add_argument("--lane-tile", type=int, default=8,
-                    help="pallas backend: lanes per VMEM grid cell")
+    ap.add_argument("--lane-tile", type=int, default=None,
+                    help="pallas backends: lanes per VMEM grid cell "
+                         "(default 8 for pallas; 0 = whole batch in one "
+                         "cell for pallas_resident, its bit-parity mode)")
+    ap.add_argument("--supersteps-per-launch", type=int, default=None,
+                    help="pallas_resident: K supersteps fused per "
+                         "megakernel launch (DESIGN.md §13; default 16)")
     ap.add_argument("--dryrun", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--file", default=None)
@@ -79,15 +84,19 @@ def main():
                               seed=args.seed)
     m, _ = rcpsp.build_model(inst)
     cm = m.compile()
-    backend_opts = ((("lane_tile", args.lane_tile),)
-                    if args.backend == "pallas" else ())
+    if args.supersteps_per_launch and args.backend != "pallas_resident":
+        ap.error("--supersteps-per-launch needs --backend pallas_resident")
+    bo = {}
+    if args.lane_tile is not None and args.backend.startswith("pallas"):
+        bo["lane_tile"] = args.lane_tile
     cfg = solver.SolveConfig.preset(
         _PRESETS[args.preset],
         n_lanes=args.lanes,
         eps_target=(args.eps_target if args.eps_target is not None
                     else args.subs),
         timeout_s=args.timeout, backend=args.backend,
-        backend_opts=backend_opts)
+        backend_opts=tuple(sorted(bo.items())),
+        supersteps_per_launch=args.supersteps_per_launch)
 
     if args.dryrun:
         from repro.launch.mesh import make_production_mesh
