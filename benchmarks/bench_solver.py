@@ -315,6 +315,66 @@ def run_throughput(lanes: int, eps_target: int, rows: List[str],
     return records
 
 
+def run_dist_bench(rows: List[str], timeout_s: float = 120.0,
+                   lanes: int = 4, eps_target: int = 16,
+                   meshes=(1, 2, 4, 8)):
+    """Distributed-EPS benchmark (core/dist_solve.py, DESIGN.md §14):
+    per mesh size, warm-solve wall time (speedup vs mesh=1), steal
+    events, bound-all-reduce count, and status/objective parity with the
+    single-shard solve.  Returns records for the BENCH `distributed`
+    section.  Mesh sizes beyond `jax.device_count()` are skipped — the
+    make-check invocation fakes 8 host devices via XLA_FLAGS."""
+    import jax
+
+    from repro.core import dist_solve
+    from repro.core import models as zoo
+
+    m, _ = zoo.ZOO["coloring"].build_model(
+        zoo.small_instance("coloring", seed=0))
+    cm = m.compile()
+    n_dev = jax.device_count()
+    records = []
+    ref = None
+    warm1 = None
+    for D in [d for d in meshes if d <= n_dev]:
+        cfg = solver.SolveConfig.preset(
+            "prove", n_lanes=lanes, eps_target=eps_target,
+            timeout_s=timeout_s, mesh_shards=D)
+        sess = solver.Solver(cfg)
+        res, _ = dist_solve.solve_dist(cm, cfg, session=sess)   # cold
+        t0 = time.time()
+        res, tr = dist_solve.solve_dist(cm, cfg, session=sess)  # warm
+        warm_s = time.time() - t0
+        if D == 1:
+            ref, warm1 = res, warm_s
+        parity = (res.status == ref.status
+                  and res.objective == ref.objective)
+        rec = dict(
+            mesh=D, model="coloring-small", status=res.status,
+            objective=res.objective, warm_solve_s=round(warm_s, 4),
+            speedup_vs_mesh1=round(warm1 / max(warm_s, 1e-9), 2),
+            n_chunks=tr.n_chunks, n_bound_allreduce=tr.n_bound_syncs,
+            n_steals=tr.n_steals, n_remeshes=len(tr.remesh_events),
+            parity_ok=parity)
+        records.append(rec)
+        rows.append(
+            f"distributed,mesh={D},{res.status},obj={res.objective},"
+            f"warm={warm_s:.3f}s,x{rec['speedup_vs_mesh1']},"
+            f"steals={tr.n_steals},allreduce={tr.n_bound_syncs},"
+            f"parity={parity}")
+        if not parity:
+            raise SystemExit(
+                f"dist parity FAILED at mesh={D}: "
+                f"{(res.status, res.objective)} vs "
+                f"{(ref.status, ref.objective)}")
+    if n_dev < max(meshes):
+        rows.append(f"distributed,NOTE,only {n_dev} device(s) visible; "
+                    f"run under XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count=8 for the "
+                    f"full sweep")
+    return records
+
+
 def merge_json(path: str, section: str, records) -> None:
     """Merge `records` into `path` under `section`, preserving whatever
     the propagation smoke already wrote there."""
@@ -362,6 +422,13 @@ def main(argv=None):
                          "to the bench JSON `superstep` section")
     ap.add_argument("--supersteps-per-launch", type=int, default=16,
                     help="K for pallas_resident in --superstep-bench")
+    ap.add_argument("--dist-bench", action="store_true",
+                    help="ONLY the distributed-EPS benchmark (DESIGN.md "
+                         "§14): warm solve wall per mesh size with "
+                         "speedup vs mesh=1, steal events and bound-all-"
+                         "reduce counts; records go to the bench JSON "
+                         "`distributed` section (run under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     ap.add_argument("--eps-target", type=int, default=64,
                     help="EPS pool size for the zoo runs (DESIGN.md §9)")
     ap.add_argument("--json", default=None,
@@ -371,12 +438,21 @@ def main(argv=None):
                          "BENCH_propagation_smoke.json")
     args = ap.parse_args(argv)
     if args.json and not (args.zoo or args.zoo_smoke or args.throughput
-                          or args.superstep_bench):
-        ap.error("--json records the zoo/api/superstep sections; pass "
-                 "--zoo, --zoo-smoke, --throughput or --superstep-bench")
+                          or args.superstep_bench or args.dist_bench):
+        ap.error("--json records the zoo/api/superstep/distributed "
+                 "sections; pass --zoo, --zoo-smoke, --throughput, "
+                 "--superstep-bench or --dist-bench")
     timeout = args.timeout or (300 if args.full else 30)
 
     rows = []
+    if args.dist_bench:
+        rows.append("distributed,mesh,status,objective,warm,speedup,"
+                    "steals,allreduce,parity")
+        records = run_dist_bench(rows, timeout_s=timeout)
+        print("\n".join(rows))
+        if args.json:
+            merge_json(args.json, "distributed", records)
+        return rows
     if args.superstep_bench:
         rows.append("superstep,backend,K,steps,dispatches,ms_per_step,"
                     "steps_per_sec,status")

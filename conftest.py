@@ -1,10 +1,20 @@
 """Repo-root conftest: puts the repo root on sys.path so tests can import
 the `benchmarks` package (`PYTHONPATH=src pytest tests/` covers `repro`).
 
-Deliberately does NOT set the 512-device XLA flag — smoke tests and
-benches must see 1 device; dry-run tests spawn subprocesses with their
-own flags (see tests/test_dryrun.py).
+Deliberately does NOT set the multi-device XLA flag in this process —
+smoke tests and benches must see 1 device; multi-device tests go through
+the `fake_devices` fixture below, which runs their payload in a
+subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(the flag only takes effect before jax initializes).
 """
+
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "tests"))
 
 
 def pytest_configure(config):
@@ -12,3 +22,23 @@ def pytest_configure(config):
         "markers",
         "slow: long-running test (full-mesh dry-runs etc.); deselect with "
         "-m 'not slow'")
+    # the engine.solve shim's DeprecationWarning is an *error* suite-wide:
+    # internal callers must use Solver sessions (tests/util.solve_session);
+    # the shim tests in tests/test_api.py opt back in via catch_warnings
+    config.addinivalue_line(
+        "filterwarnings", "error:engine.solve is deprecated")
+
+
+@pytest.fixture(scope="session")
+def fake_devices():
+    """Runner for multi-device CPU tests: ``fake_devices(code)`` executes
+    ``code`` in a subprocess that sees 8 fake host devices and returns
+    its stdout.  Skips the test cleanly when this JAX build ignores the
+    forced-host-device-count flag (tests/util.py probes once per
+    session)."""
+    import util
+
+    if not util.can_fake_devices(8):
+        pytest.skip("jax build cannot fake host devices "
+                    "(--xla_force_host_platform_device_count ignored)")
+    return util.run_fake_devices

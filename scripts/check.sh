@@ -14,12 +14,15 @@
 # pallas_resident solve in interpret mode on CPU, DESIGN.md §13 — its
 # K-launch bit-parity suite tests/test_resident.py already runs inside
 # tier-1), the superstep-orchestration bench (ms_per_superstep +
-# dispatches_per_solve per backend) and the docs check, writing
+# dispatches_per_solve per backend), the distributed-EPS bench (mesh
+# 1→8 on faked host devices: speedup vs mesh=1, steal events,
+# bound-all-reduce counts, DESIGN.md §14) and the docs check, writing
 # BENCH_propagation_smoke.json (propagation rows + `solver` + `api` +
-# `superstep` sections) at the repo root so the perf trajectory
-# populates per PR.  The zoo smoke sweeps EVERY registered backend,
-# pallas_resident included, and hard-fails on any proven-optimum
-# mismatch between backends.
+# `superstep` + `distributed` sections) at the repo root so the perf
+# trajectory populates per PR.  The zoo smoke sweeps EVERY registered
+# backend, pallas_resident included, and hard-fails on any
+# proven-optimum mismatch between backends; the dist bench hard-fails
+# on any mesh losing status/objective parity with mesh=1.
 #
 # Exit code: nonzero on ANY test failure, collection error or bench
 # failure.
@@ -29,7 +32,7 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 echo "== tier-1 tests (zero-failures gate) =="
 pytest_log=$(mktemp)
-python -m pytest -q --continue-on-collection-errors 2>&1 | tee "$pytest_log"
+python -m pytest -q --durations=15 --continue-on-collection-errors 2>&1 | tee "$pytest_log"
 rc=${PIPESTATUS[0]}
 if [ "$rc" -ne 0 ]; then
     echo "FAIL: tier-1 suite not green (pytest exit $rc)" >&2
@@ -69,6 +72,12 @@ echo
 echo "== session-API smoke (cold+warm solve, solve_many x4, all backends) =="
 python -m benchmarks.bench_solver \
     --throughput --json BENCH_propagation_smoke.json || exit 1
+
+echo
+echo "== distributed-EPS bench (mesh 1..8 on faked host devices, §14) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m benchmarks.bench_solver \
+    --dist-bench --json BENCH_propagation_smoke.json || exit 1
 
 echo
 echo "== docs check (README/DESIGN references + quickstart dry-run) =="

@@ -161,9 +161,16 @@ class SolveConfig:
     max_depth: int = 2048
     max_fixpoint_iters: Optional[int] = None
     stop_on_first: bool = False
-    # multi-device engine
+    # multi-device engine (explicit-mesh legacy path)
     mesh: Optional[jax.sharding.Mesh] = None
     lane_axes: Tuple[str, ...] = ()
+    # distributed EPS engine (core/dist_solve.py, DESIGN.md §14): shard
+    # the lane pool over a 1-D `solve` mesh of this many devices, with
+    # per-superstep bound all-reduce, chunk-granularity work stealing
+    # (`steal`) and elastic device-loss recovery.  None → single-device;
+    # the CLI spelling is `launch/solve.py --mesh N`.
+    mesh_shards: Optional[int] = None
+    steal: bool = True
     # pad EPS pools to the next power of two with explicitly-failed
     # stores so the compiled runner re-lowers per size *bucket*, not per
     # exact pool size (DESIGN.md §11 cache-key discussion)
@@ -220,7 +227,15 @@ class SolveConfig:
         if self.val_strategy not in _VAL_STRATEGIES:
             bad(f"val_strategy {self.val_strategy!r} not in "
                 f"{_VAL_STRATEGIES}")
-        if self.mesh is not None and self.backend == "pallas_resident":
+        if self.mesh_shards is not None:
+            if not isinstance(self.mesh_shards, int) or self.mesh_shards < 1:
+                bad(f"mesh_shards must be None or a positive int, got "
+                    f"{self.mesh_shards!r}")
+            if self.mesh is not None:
+                bad("mesh_shards (the dist_solve engine) and mesh (the "
+                    "explicit-mesh path) are mutually exclusive")
+        if ((self.mesh is not None or self.mesh_shards is not None)
+                and self.backend == "pallas_resident"):
             bad("backend 'pallas_resident' does not support mesh "
                 "sharding: the EPS pool cursor is per-device VMEM state "
                 "inside the megakernel (use backend='pallas' on meshes)")
@@ -277,7 +292,7 @@ class SolveConfig:
                 self.supersteps_per_launch,
                 self.var_strategy, self.val_strategy, self.max_depth,
                 self.max_fixpoint_iters, self.stop_on_first, self.mesh,
-                self.lane_axes)
+                self.lane_axes, self.mesh_shards)
 
 
 def shape_signature(cm: CompiledModel) -> tuple:
@@ -317,9 +332,9 @@ def _chunk_body(opts: S.SearchOptions, stop_on_first: bool, axis_names,
     done = jnp.all(st.done)
     any_sol = jnp.any(st.has_sol)
     if axis_names:
-        best = lax.pmin(best, axis_names)
-        done = lax.pmin(done.astype(jnp.int32), axis_names) == 1
-        any_sol = lax.pmax(any_sol.astype(jnp.int32), axis_names) == 1
+        from repro.distributed.collectives import solver_bound_sync
+        best, done, any_sol = solver_bound_sync(best, done, any_sol,
+                                                axis_names)
     gbest = jnp.minimum(gbest, best)
     # guard the counter on the *incoming* done flag: inside the plain
     # while_loop the body never runs once done (no-op guard), but under
@@ -607,6 +622,12 @@ class Solver:
         (``final=True``) carries the `SolveResult` (with its
         `improvements` trace)."""
         cfg = self._config_for(config, overrides)
+        if cfg.mesh_shards is not None:
+            from repro.core import dist_solve
+            self.stats["solves"] += 1
+            yield from dist_solve.solve_iter_dist(self, _canonical(cm), cfg,
+                                                  subs=subs)
+            return
         opts = cfg.search_options()
         t0 = time.time()
         self.stats["solves"] += 1
@@ -703,7 +724,7 @@ class Solver:
         if not cms:
             return []
         cfg = self._config_for(config, overrides)
-        if cfg.mesh is not None:
+        if cfg.mesh is not None or cfg.mesh_shards is not None:
             raise ValueError("solve_many is single-device; it cannot be "
                              "combined with a mesh config")
         opts = cfg.search_options()

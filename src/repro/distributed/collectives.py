@@ -29,6 +29,37 @@ import jax.numpy as jnp
 from jax import lax
 
 
+def all_min(x: jax.Array, axis_name) -> jax.Array:
+    """Min-reduce across a mesh axis (or tuple of axes) — the anytime
+    B&B bound share of DESIGN.md §9/§14.  A thin named wrapper over
+    ``lax.pmin`` so the solver's cross-shard traffic is auditable in one
+    place (and countable by the distributed bench)."""
+    return lax.pmin(x, axis_name)
+
+
+def all_any(flag: jax.Array, axis_name) -> jax.Array:
+    """Boolean OR across a mesh axis (pmax on the int embedding)."""
+    return lax.pmax(flag.astype(jnp.int32), axis_name) == 1
+
+
+def all_every(flag: jax.Array, axis_name) -> jax.Array:
+    """Boolean AND across a mesh axis (pmin on the int embedding)."""
+    return lax.pmin(flag.astype(jnp.int32), axis_name) == 1
+
+
+def solver_bound_sync(best, done, any_sol, axis_name):
+    """One bound-sharing round for the distributed EPS engine
+    (DESIGN.md §14): the global incumbent bound is the min over shards,
+    the pool is globally exhausted only when EVERY shard is done, and a
+    solution exists anywhere iff SOME shard has one.  Runs once per
+    superstep inside the sharded chunk body (`api._chunk_body`), so all
+    lanes on all devices prune against the best objective found
+    anywhere — TURBO's global-memory best-bound cell, stretched over the
+    mesh."""
+    return (all_min(best, axis_name), all_every(done, axis_name),
+            all_any(any_sol, axis_name))
+
+
 def int8_psum_mean(x: jax.Array, axis_name: str) -> jax.Array:
     """Mean over `axis_name` with int8-compressed payload.
 

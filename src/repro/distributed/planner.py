@@ -101,6 +101,45 @@ def schedule_microbatches(stage_costs: Sequence[int], n_microbatches: int,
     return starts, int(res.objective), res
 
 
+def plan_steal(owned: Sequence[Sequence[int]], n_shards: int
+               ) -> Tuple[List[List[int]], int]:
+    """Work-stealing plan for the distributed EPS engine (DESIGN.md §14):
+    repartition the undispatched subproblem ids over ``n_shards`` so
+    shard loads are balanced to within one entry, moving as few entries
+    as possible (a shard keeps its own ids up to its quota before any
+    surplus migrates to deficit shards).
+
+    Deterministic in its inputs — like the rest of this module, every
+    host computes the same plan from the same cursor snapshot, so no
+    coordinator is needed.  Returns ``(assignment, n_moved)`` where
+    ``assignment[d]`` is the id list shard ``d`` owns after the steal.
+
+    ``n_shards`` may differ from ``len(owned)``: the elastic-remesh path
+    (ft/fault_tolerance.py) replans a lost shard's slice over the
+    surviving shard count with the same function.
+    """
+    total = sum(len(o) for o in owned)
+    base, extra = divmod(total, n_shards)
+    quota = [base + (1 if d < extra else 0) for d in range(n_shards)]
+    assignment: List[List[int]] = [[] for _ in range(n_shards)]
+    surplus: List[int] = []
+    for d in range(n_shards):
+        own = sorted(owned[d]) if d < len(owned) else []
+        assignment[d] = own[:quota[d]]
+        surplus.extend(own[quota[d]:])
+    # a shrinking remesh folds the dropped shards' ids into the surplus
+    surplus.extend(x for o in owned[n_shards:] for x in sorted(o))
+    surplus.sort()
+    moved = len(surplus)
+    for d in range(n_shards):
+        need = quota[d] - len(assignment[d])
+        if need > 0:
+            assignment[d].extend(surplus[:need])
+            del surplus[:need]
+    assert not surplus, "plan_steal: quota bookkeeping broke"
+    return assignment, moved
+
+
 def pipeline_efficiency(stage_costs: Sequence[int], makespan: int,
                         n_microbatches: int) -> float:
     """Schedule quality vs the pipeline lower bound

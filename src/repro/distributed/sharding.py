@@ -54,8 +54,44 @@ SERVE_RULES: Rules = {
 }
 
 
+# distributed EPS solver (core/dist_solve.py, DESIGN.md §14): the lane
+# batch and the subproblem pool both shard over the 1-D `solve` axis;
+# everything else (model tables, scalar bounds/flags) is replicated.
+SOLVE_RULES: Rules = {
+    "lanes": ("solve",),
+    "pool": ("solve",),
+}
+
+
 def rules_for(mode: str) -> Rules:
     return TRAIN_RULES if mode == "train" else SERVE_RULES
+
+
+def dist_solve_specs(state, n_pool: int, mesh: Mesh,
+                     rules: Optional[Rules] = None):
+    """PartitionSpecs for one distributed-solve chunk call
+    (DESIGN.md §14): ``(pool_spec, carry_spec)`` where the carry is
+    ``(lane_state, gbest, gdone, it, pool_heads)``.
+
+    Derived through the same logical-axis rule table as the NN side
+    (`spec_for` drops any non-dividing assignment), so a pool or lane
+    count that does not divide the mesh degrades to replication instead
+    of an invalid sharding — callers pad first (`eps.pad_pool`) to keep
+    the shards real.
+    """
+    rules = rules or SOLVE_RULES
+
+    def lane_leaf(x):
+        axes = ("lanes",) + (None,) * (x.ndim - 1)
+        return spec_for(tuple(x.shape), axes, rules, mesh)
+
+    state_spec = jax.tree.map(lane_leaf, state)
+    pool_spec = spec_for((n_pool, 1), ("pool", None), rules, mesh)
+    n_dev = int(np.prod([mesh.shape[a] for a in rules["lanes"]
+                         if a in mesh.shape]))
+    heads_spec = spec_for((n_dev,), ("lanes",), rules, mesh)
+    carry_spec = (state_spec, P(), P(), P(), heads_spec)
+    return pool_spec, carry_spec
 
 
 def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],

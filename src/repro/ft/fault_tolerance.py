@@ -151,6 +151,80 @@ class TrainSupervisor:
 
 
 # --------------------------------------------------------------------------
+# solver-side elastic remesh (distributed EPS engine, DESIGN.md §14)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeviceLoss:
+    """Deterministic fault schedule for the distributed EPS solver
+    (core/dist_solve.py): after ``at_chunk`` completed host chunks,
+    shard ``shard`` is declared dead.  The loss is *detected* by the same
+    Heartbeat/FailureInjector pair the training supervisor uses (hosts
+    are named ``shard<d>``), and *recovered* by `solver_shard_loss` —
+    the solver analogue of `elastic_remesh`."""
+    at_chunk: int
+    shard: int
+
+
+class LogicalClock:
+    """Chunk-counter clock for the solver heartbeat: the solve loop
+    advances ``t`` once per host chunk, so a shard that misses one beat
+    is declared dead at the *next chunk boundary* — the solver analogue
+    of the training supervisor's wall-clock timeout, without making
+    fault detection latency depend on real time in tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def solver_heartbeat(n_shards: int, loss: Optional[DeviceLoss]):
+    """(Heartbeat, FailureInjector) pair watching the solve's shards.
+    With ``loss=None`` the injector schedule is empty — every shard
+    beats forever.  The heartbeat runs on a `LogicalClock` (exposed as
+    ``hb.clock``) that the solve loop ticks once per chunk."""
+    hosts = [f"shard{d}" for d in range(n_shards)]
+    schedule = ({loss.at_chunk: [f"shard{loss.shard}"]}
+                if loss is not None else {})
+    hb = Heartbeat(hosts=hosts, timeout_s=0.5, clock=LogicalClock())
+    return hb, FailureInjector(schedule)
+
+
+def solver_shard_loss(snapshot: dict, lost: int) -> dict:
+    """Recover a distributed solve from the loss of shard ``lost``,
+    given the last chunk-boundary ``snapshot`` (host-side numpy views,
+    leading axis = shard):
+
+    * ``state``    — pytree of lane state, each leaf ``[D, L, ...]``
+    * ``owned``    — per-shard lists of undispatched pool ids
+    * ``inflight`` — per-shard ``(root_lb, root_ub)`` rows of lanes that
+      are mid-DFS (loaded a subproblem, not yet done)
+
+    Returns the survivor view: the lost shard's lane state is dropped
+    (its rows are unrecoverable device memory), while everything the
+    host can reconstruct from the checkpoint is requeued — its
+    undispatched pool slice verbatim, plus the *root* stores of its
+    in-flight subproblems (re-exploring part of a subtree is sound: DFS
+    over a pool partition finds the same optimum, it just repeats
+    nodes).  The incumbent is NOT taken from the lost shard's device
+    state — callers must fold in the host-side incumbent checkpoint
+    streamed at every chunk boundary (api.solve_iter's anytime
+    contract), which is exactly what survives a crash on a real mesh.
+    """
+    D = len(snapshot["owned"])
+    keep = [d for d in range(D) if d != lost]
+    state = jax.tree.map(lambda x: np.asarray(x)[keep], snapshot["state"])
+    owned = [list(snapshot["owned"][d]) for d in keep]
+    requeue_ids = sorted(snapshot["owned"][lost])
+    lost_lb, lost_ub = snapshot["inflight"][lost]
+    return dict(state=state, owned=owned, requeue_ids=requeue_ids,
+                requeue_roots=(np.asarray(lost_lb), np.asarray(lost_ub)),
+                survivors=keep)
+
+
+# --------------------------------------------------------------------------
 # solver-side straggler mitigation (lane rebalance — beyond-paper)
 # --------------------------------------------------------------------------
 

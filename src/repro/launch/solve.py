@@ -63,6 +63,13 @@ def main():
     ap.add_argument("--supersteps-per-launch", type=int, default=None,
                     help="pallas_resident: K supersteps fused per "
                          "megakernel launch (DESIGN.md §13; default 16)")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="distributed EPS (core/dist_solve.py, DESIGN.md "
+                         "§14): shard the lane pool over N devices with "
+                         "per-chunk bound sharing, work stealing and "
+                         "elastic device-loss recovery; on CPU fake "
+                         "devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--dryrun", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--file", default=None)
@@ -96,7 +103,8 @@ def main():
                     else args.subs),
         timeout_s=args.timeout, backend=args.backend,
         backend_opts=tuple(sorted(bo.items())),
-        supersteps_per_launch=args.supersteps_per_launch)
+        supersteps_per_launch=args.supersteps_per_launch,
+        mesh_shards=args.mesh)
 
     if args.dryrun:
         from repro.launch.mesh import make_production_mesh
@@ -146,8 +154,18 @@ def main():
 
     t0 = time.time()
     sess = solver.Solver(cfg)
-    res = None
-    for ev in sess.solve_iter(cm):
+    res, trace = None, None
+    if args.mesh is not None:
+        # dist path driven directly so the solve's DistTrace (steal /
+        # remesh / bound-sync counters) is printable at the end
+        from repro.core import dist_solve
+        from repro.core.api import _canonical
+        trace = dist_solve.DistTrace()
+        events = dist_solve.solve_iter_dist(sess, _canonical(cm), cfg,
+                                            trace=trace)
+    else:
+        events = sess.solve_iter(cm)
+    for ev in events:
         if ev.final:
             res = ev.result
         elif ev.best_objective is not None and ev.incumbent is not None:
@@ -159,6 +177,10 @@ def main():
           f"supersteps={res.n_supersteps} improvements="
           f"{[i.objective for i in res.improvements]} "
           f"wall={time.time()-t0:.1f}s complete={res.complete}")
+    if trace is not None:
+        print(f"  distributed: shards={args.mesh} chunks={trace.n_chunks} "
+              f"bound_syncs={trace.n_bound_syncs} steals={trace.n_steals} "
+              f"remeshes={len(trace.remesh_events)}")
 
 
 if __name__ == "__main__":

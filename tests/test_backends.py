@@ -24,7 +24,7 @@ from repro.core.backend import (PropagationBackend, available_backends,
                                 get_backend, register_backend)
 from repro.core.fixpoint import fixpoint, fixpoint_batch
 from repro.core.models import rcpsp
-from util import random_model, random_substores
+from util import random_model, random_substores, solve_session
 
 ALL = ("gather", "scatter", "pallas")
 
@@ -160,7 +160,7 @@ def test_registry_roundtrip_and_unknown():
 
 
 def test_engine_solves_with_every_backend():
-    """engine.solve(..., opts=SearchOptions(backend=...)) end-to-end on
+    """solve_session(..., opts=SearchOptions(backend=...)) end-to-end on
     CPU for all three backends, identical optimum and node counts (the
     superstep is deterministic regardless of propagation strategy)."""
     inst = rcpsp.generate(5, n_resources=2, seed=3, edge_prob=0.3)
@@ -171,7 +171,7 @@ def test_engine_solves_with_every_backend():
         opts = S.SearchOptions(
             var_strategy=S.MIN_LB, max_depth=128, backend=name,
             backend_opts=((("lane_tile", 4),) if name == "pallas" else ()))
-        results[name] = engine.solve(cm, n_lanes=4, n_subproblems=8,
+        results[name] = solve_session(cm, n_lanes=4, n_subproblems=8,
                                      opts=opts, timeout_s=600, chunk=64)
     ref = results["gather"]
     assert ref.status == engine.OPTIMAL

@@ -7,6 +7,7 @@ import itertools
 import numpy as np
 
 from repro.core import baseline, engine, eps, search as S
+from util import solve_session
 from repro.core.model import Model
 from repro.core.models import rcpsp
 
@@ -96,8 +97,8 @@ def test_eps_target_same_optimum_fewer_supersteps():
     m, _ = rcpsp.build_model(inst, decompose=True)
     cm = m.compile()
     opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=256)
-    single = engine.solve(cm, n_lanes=8, eps_target=1, opts=opts)
-    multi = engine.solve(cm, n_lanes=8, eps_target=8, opts=opts)
+    single = solve_session(cm, n_lanes=8, eps_target=1, opts=opts)
+    multi = solve_session(cm, n_lanes=8, eps_target=8, opts=opts)
     assert single.status == multi.status == engine.OPTIMAL
     assert single.objective == multi.objective
     assert multi.n_supersteps < single.n_supersteps
@@ -109,7 +110,7 @@ def test_eps_target_matches_default_decomposition():
     m, _ = rcpsp.build_model(inst)
     cm = m.compile()
     opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=256)
-    r_eps = engine.solve(cm, n_lanes=8, eps_target=8, opts=opts)
-    r_def = engine.solve(cm, n_lanes=8, opts=opts)
+    r_eps = solve_session(cm, n_lanes=8, eps_target=8, opts=opts)
+    r_def = solve_session(cm, n_lanes=8, opts=opts)
     assert r_eps.status == r_def.status == engine.OPTIMAL
     assert r_eps.objective == r_def.objective

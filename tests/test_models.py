@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import baseline, engine, search as S
+from util import solve_session
 from repro.core import models as zoo
 from repro.core.backend import available_backends
 from repro.core.models import coloring, jobshop, knapsack, nqueens
@@ -17,7 +18,7 @@ OPTS = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=256)
 def _solve(cm, backend="gather", **kw):
     opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=256,
                            backend=backend)
-    return engine.solve(cm, n_lanes=8, eps_target=16, opts=opts, **kw)
+    return solve_session(cm, n_lanes=8, eps_target=16, opts=opts, **kw)
 
 
 @pytest.mark.parametrize("name", sorted(zoo.ZOO))

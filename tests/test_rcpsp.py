@@ -8,6 +8,7 @@ import pytest
 
 from repro.core.models import rcpsp
 from repro.core import engine, search as S
+from util import solve_session
 
 
 def test_generator_deterministic():
@@ -38,7 +39,7 @@ def test_overlap_booleans_consistent():
     inst = rcpsp.generate(5, n_resources=2, seed=4, edge_prob=0.3)
     m, h = rcpsp.build_model(inst, decompose=True)
     cm = m.compile()
-    res = engine.solve(cm, n_lanes=4, n_subproblems=8,
+    res = solve_session(cm, n_lanes=4, n_subproblems=8,
                        opts=S.SearchOptions(var_strategy=S.MIN_LB,
                                             max_depth=256))
     assert res.status == engine.OPTIMAL
@@ -82,7 +83,7 @@ def test_patterson_parser_roundtrip():
 def test_precedence_respected_in_solution():
     inst = rcpsp.generate(6, n_resources=2, seed=12, edge_prob=0.4)
     m, h = rcpsp.build_model(inst)
-    res = engine.solve(m.compile(), n_lanes=4, n_subproblems=8,
+    res = solve_session(m.compile(), n_lanes=4, n_subproblems=8,
                        opts=S.SearchOptions(var_strategy=S.MIN_LB,
                                             max_depth=256))
     assert res.status == engine.OPTIMAL
@@ -100,7 +101,7 @@ def test_zero_duration_tasks():
         capacity=np.array([2]),
         name="dummy-ends")
     m, h = rcpsp.build_model(inst)
-    res = engine.solve(m.compile(), n_lanes=2, n_subproblems=4,
+    res = solve_session(m.compile(), n_lanes=2, n_subproblems=4,
                        opts=S.SearchOptions(var_strategy=S.MIN_LB,
                                             max_depth=128))
     assert res.status == engine.OPTIMAL

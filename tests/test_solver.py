@@ -8,6 +8,7 @@ import pytest
 
 from repro.core.model import Model
 from repro.core import engine, baseline, eps, search as S
+from util import solve_session
 from repro.core.models import rcpsp
 
 
@@ -47,7 +48,7 @@ def test_engine_matches_brute_force():
     m = small_opt_model()
     cm = m.compile()
     bf = brute_force_min(m, cm, cm.obj_var)
-    res = engine.solve(cm, n_lanes=4, n_subproblems=8)
+    res = solve_session(cm, n_lanes=4, n_subproblems=8)
     assert res.status == engine.OPTIMAL
     assert res.objective == bf
 
@@ -59,7 +60,7 @@ def test_engine_matches_baseline_statuses():
         cm = m.compile()
         opts = S.SearchOptions(var_strategy=S.MIN_LB, max_depth=256)
         seq = baseline.SequentialSolver(cm, opts).solve(timeout_s=120)
-        par = engine.solve(cm, n_lanes=4, n_subproblems=8, opts=opts,
+        par = solve_session(cm, n_lanes=4, n_subproblems=8, opts=opts,
                            timeout_s=300)
         assert seq.status == par.status == engine.OPTIMAL
         assert seq.objective == par.objective
@@ -69,7 +70,7 @@ def test_solution_passes_ground_checker():
     inst = rcpsp.generate(6, n_resources=3, seed=9, edge_prob=0.25)
     m, h = rcpsp.build_model(inst)
     cm = m.compile()
-    res = engine.solve(cm, n_lanes=8, n_subproblems=16,
+    res = solve_session(cm, n_lanes=8, n_subproblems=16,
                        opts=S.SearchOptions(var_strategy=S.MIN_LB,
                                             max_depth=256))
     assert res.status == engine.OPTIMAL
@@ -83,7 +84,7 @@ def test_unsat_detected():
     a = m.int_var(0, 3, "a")
     b = m.int_var(0, 3, "b")
     m.add(a + b >= 9)
-    res = engine.solve(m.compile(), n_lanes=2)
+    res = solve_session(m.compile(), n_lanes=2)
     assert res.status == engine.UNSAT and res.complete
 
 
@@ -95,7 +96,7 @@ def test_result_invariant_to_lane_count():
     cm = m.compile()
     objs = set()
     for lanes, subs in [(1, 1), (2, 4), (8, 32)]:
-        res = engine.solve(cm, n_lanes=lanes, n_subproblems=subs,
+        res = solve_session(cm, n_lanes=lanes, n_subproblems=subs,
                            opts=S.SearchOptions(max_depth=256))
         assert res.status == engine.OPTIMAL
         objs.add(res.objective)
@@ -109,7 +110,7 @@ def test_eps_partition_is_complete():
     cm = m.compile()
     subs_lb, subs_ub = eps.decompose(cm, 8)
     # optimal solution found without EPS must fall in exactly >=1 box
-    res = engine.solve(cm, n_lanes=1, subs=(np.asarray(cm.lb0)[None],
+    res = solve_session(cm, n_lanes=1, subs=(np.asarray(cm.lb0)[None],
                                             np.asarray(cm.ub0)[None]))
     sol = res.solution
     hits = 0
@@ -123,7 +124,7 @@ def test_bnb_prunes_but_keeps_optimum():
     m = small_opt_model()
     cm = m.compile()
     # huge lane count => massive parallel redundancy, same answer
-    res = engine.solve(cm, n_lanes=16, n_subproblems=64)
+    res = solve_session(cm, n_lanes=16, n_subproblems=64)
     assert res.status == engine.OPTIMAL
     assert res.objective == brute_force_min(m, cm, cm.obj_var)
 
@@ -135,7 +136,7 @@ def test_satisfaction_stop_on_first():
     m.add((x + y).eq(40))
     m.add(x >= 10)
     opts = S.SearchOptions(stop_on_first=True)
-    res = engine.solve(m.compile(), n_lanes=4, opts=opts)
+    res = solve_session(m.compile(), n_lanes=4, opts=opts)
     assert res.status == engine.SAT
     assert res.solution[x.idx] + res.solution[y.idx] == 40
 
@@ -151,8 +152,8 @@ def test_multi_device_engine_matches_single():
     inst = rcpsp.generate(5, n_resources=2, seed=1, edge_prob=0.3)
     m, _ = rcpsp.build_model(inst)
     cm = m.compile()
-    r1 = engine.solve(cm, n_lanes=4, n_subproblems=16)
-    r2 = engine.solve(cm, n_lanes=2, n_subproblems=16, mesh=mesh,
+    r1 = solve_session(cm, n_lanes=4, n_subproblems=16)
+    r2 = solve_session(cm, n_lanes=2, n_subproblems=16, mesh=mesh,
                       lane_axes=("workers",))
     assert r1.status == r2.status == engine.OPTIMAL
     assert r1.objective == r2.objective
@@ -192,7 +193,7 @@ def test_solution_requires_fixpoint_convergence():
     m.add((x + y).eq(3))
     m.add(x <= 1)
     opts = S.SearchOptions(max_fixpoint_iters=1, max_depth=64)
-    res = engine.solve(m.compile(), n_lanes=2, n_subproblems=4, opts=opts)
+    res = solve_session(m.compile(), n_lanes=2, n_subproblems=4, opts=opts)
     assert res.status == engine.SAT
     sol = res.solution
     assert sol[x.idx] + sol[y.idx] == 3 and sol[x.idx] <= 1

@@ -1,10 +1,83 @@
-"""Shared test helpers: random PCCP models + store perturbations."""
+"""Shared test helpers: random PCCP models, store perturbations, and the
+multi-device CPU harness (subprocesses with XLA-faked host devices) that
+the distributed-EPS tests run on."""
 
 from __future__ import annotations
+
+import functools
+import os
+import subprocess
+import sys
 
 import numpy as np
 
 from repro.core.model import Model
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def solve_session(cm, *, n_lanes=64, n_subproblems=None, eps_target=None,
+                  opts=None, timeout_s=None, max_supersteps=None, chunk=256,
+                  mesh=None, lane_axes=(), subs=None):
+    """`engine.solve`-shaped convenience over the session API: maps the
+    legacy kwargs onto a `SolveConfig` and solves through the shared
+    default session (compile caching across the whole test run) —
+    without tripping the shim's DeprecationWarning.  Tests asserting on
+    the deprecation itself call `engine.solve` directly
+    (tests/test_api.py)."""
+    from repro import solver
+    from repro.core import search as S
+
+    o = opts or S.SearchOptions()
+    cfg = solver.SolveConfig(
+        n_lanes=n_lanes,
+        eps_target=(eps_target if eps_target is not None else n_subproblems),
+        chunk=chunk, timeout_s=timeout_s, max_supersteps=max_supersteps,
+        backend=o.backend, backend_opts=o.backend_opts,
+        var_strategy=o.var_strategy, val_strategy=o.val_strategy,
+        max_depth=o.max_depth, max_fixpoint_iters=o.max_fixpoint_iters,
+        stop_on_first=o.stop_on_first, mesh=mesh,
+        lane_axes=tuple(lane_axes))
+    return solver.solve(cm, subs=subs, config=cfg)
+
+
+def run_fake_devices(code: str, n_devices: int = 8,
+                     timeout: int = 1200) -> str:
+    """Run ``code`` in a fresh interpreter that sees ``n_devices`` fake
+    CPU devices (``XLA_FLAGS=--xla_force_host_platform_device_count``,
+    which only takes effect before jax initializes — hence the
+    subprocess).  Returns stdout; asserts a zero exit with the child's
+    stderr tail in the failure message."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{n_devices}")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, cwd=ROOT, timeout=timeout)
+    assert r.returncode == 0, (
+        f"fake-device subprocess failed (rc={r.returncode}):\n"
+        f"{r.stderr[-3000:]}")
+    return r.stdout
+
+
+@functools.lru_cache(maxsize=None)
+def can_fake_devices(n_devices: int = 8) -> bool:
+    """True when this JAX build honors the forced host device count —
+    probed once per test session in a throwaway subprocess so tests can
+    skip cleanly on builds where the flag is a no-op."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{n_devices}")
+    try:
+        r = subprocess.run(
+            [sys.executable, "-c",
+             "import jax; print(jax.device_count())"],
+            capture_output=True, text=True, env=env, cwd=ROOT,
+            timeout=600)
+    except (OSError, subprocess.TimeoutExpired):
+        return False
+    return r.returncode == 0 and r.stdout.strip() == str(n_devices)
 
 
 def random_model(rng: np.random.Generator, n_vars: int = 6,
