@@ -4,7 +4,8 @@ export PYTHONPATH
 .PHONY: check test bench docs-check
 
 # tier-1 suite + propagation smoke + model-zoo solver smoke + session-API
-# smoke (cold/warm + solve_many) + docs check
+# smoke (cold/warm + solve_many) + solver-serving bench (open-loop
+# continuous batching, §15) + docs check
 # (writes BENCH_propagation_smoke.json; see scripts/check.sh)
 check:
 	scripts/check.sh

@@ -35,6 +35,15 @@ per backend, one warm solve driven at ``chunk=1`` host granularity,
 recording ms_per_superstep / supersteps_per_sec / dispatches_per_solve
 into the `superstep` section — the unfused backends pay one host
 dispatch per superstep, ``pallas_resident`` one per K supersteps.
+
+``--serve-bench`` is the solver-as-a-service metric (DESIGN.md §15): a
+seeded open-loop Poisson load (≥50 requests over ≥2 shape buckets with
+mixed deadlines) through the continuous-batching `SolverScheduler`,
+hard-failing unless every completed result is bit-identical to a
+sequential `Solver.solve` reference, slots actually batch (>1 request
+co-resident) and each bucket compiled at most once; p50/p99
+TTFI/latency, queue depth, occupancy and instances/s land in the
+`serving` section.
 """
 
 from __future__ import annotations
@@ -206,13 +215,16 @@ def run_superstep_bench(rows: List[str], backends, lanes: int = 8,
         res = sess.solve(cm)                       # cold: compile
         wall = float("inf")
         for _ in range(5):                         # warm: best of 5 drains
-            t0 = time.time()
             dispatches = 0
             for ev in sess.solve_iter(cm):
                 dispatches += 1
                 if ev.final:
                     res = ev.result
-            wall = min(wall, time.time() - t0)
+            # the Progress timing contract (api.Progress): wall_s is the
+            # event stream's own elapsed-since-solve-start clock — the
+            # single timing source shared with the serving metrics, so
+            # this bench never re-times what solve_iter already stamped
+            wall = min(wall, res.wall_s)
         n_steps = max(res.n_supersteps, 1)
         rec = dict(
             backend=backend, model=inst.name,
@@ -375,6 +387,86 @@ def run_dist_bench(rows: List[str], timeout_s: float = 120.0,
     return records
 
 
+def run_serve_bench(rows: List[str], *, n_requests: int = 50,
+                    rate_rps: float = 100.0, seed: int = 0,
+                    max_batch: int = 4, backend: str = "gather",
+                    max_wall_s: float = 600.0):
+    """Solver-as-a-service under seeded open-loop load (DESIGN.md §15).
+
+    Drives the continuous-batching `SolverScheduler` with a fixed-seed
+    Poisson trace over the default zoo mix (two seed-stable shape
+    buckets, mixed deadlines) and HARD-FAILS (SystemExit) unless:
+
+    * parity — every completed request's (status, objective) is
+      bit-identical to a sequential warm `Solver.solve` of the same
+      instance;
+    * batching — more than one request was co-resident in a lane batch
+      at some quantum (the continuous-batching win actually happened);
+    * compile discipline — every bucket cold-compiled at most once
+      (late same-shape requests joined warm).
+
+    Returns one record for the BENCH `serving` section: the
+    `MetricsRecorder` summary (p50/p99 TTFI / time-to-optimal / latency,
+    queue depth, occupancy, instances/s) plus per-bucket counters.
+    """
+    from repro.serve.loadgen import (poisson_trace, run_open_loop,
+                                     sequential_reference)
+    from repro.serve.scheduler import SolverScheduler
+
+    cfg = solver.SolveConfig.preset(
+        "prove", backend=backend, n_lanes=8, eps_target=16, chunk=16,
+        max_depth=256)
+    trace = poisson_trace(n_requests, rate_rps, seed=seed)
+    sched = SolverScheduler(cfg, max_batch=max_batch)
+    handles = run_open_loop(sched, trace, max_wall_s=max_wall_s)
+    summary = sched.recorder.summary()
+    buckets = sched.buckets()
+
+    ref = sequential_reference(trace, cfg)
+    n_checked = n_bad = 0
+    for _, h in handles:
+        res = h.result()
+        if not res.complete:        # deadline evictions have no oracle
+            continue
+        n_checked += 1
+        if (res.status, res.objective) != ref[h.request.request_id]:
+            n_bad += 1
+            print(f"serve-bench PARITY MISMATCH {h.request.request_id}: "
+                  f"served={(res.status, res.objective)} "
+                  f"sequential={ref[h.request.request_id]}")
+    max_live = summary["batch_live_slots"].get("max", 0.0)
+    bad_compiles = {k: v["n_compiles"] for k, v in buckets.items()
+                    if v["n_compiles"] > 1}
+    if n_bad:
+        raise SystemExit(f"serve-bench: {n_bad}/{n_checked} parity "
+                         f"mismatches vs sequential Solver.solve")
+    if len(buckets) < 2:
+        raise SystemExit(f"serve-bench: expected >= 2 shape buckets, "
+                         f"got {list(buckets)}")
+    if not max_live > 1:
+        raise SystemExit(f"serve-bench: no continuous batching happened "
+                         f"(max live slots {max_live} <= 1)")
+    if bad_compiles:
+        raise SystemExit(f"serve-bench: buckets recompiled after their "
+                         f"cold compile: {bad_compiles}")
+
+    rec = dict(n_requests=n_requests, rate_rps=rate_rps, seed=seed,
+               max_batch=max_batch, backend=backend,
+               parity_checked=n_checked, parity_ok=True,
+               summary=summary, buckets=buckets)
+    rows.append(
+        f"serving,{backend},req={n_requests},rate={rate_rps}/s,"
+        f"buckets={len(buckets)},"
+        f"ttfi_p50={summary['ttfi_s'].get('p50')}s,"
+        f"ttfi_p99={summary['ttfi_s'].get('p99')}s,"
+        f"lat_p50={summary['latency_s'].get('p50')}s,"
+        f"lat_p99={summary['latency_s'].get('p99')}s,"
+        f"occ_max={summary['batch_occupancy'].get('max')},"
+        f"live_max={max_live},"
+        f"inst/s={summary['instances_per_sec']},parity=OK")
+    return [rec]
+
+
 def merge_json(path: str, section: str, records) -> None:
     """Merge `records` into `path` under `section`, preserving whatever
     the propagation smoke already wrote there."""
@@ -422,6 +514,18 @@ def main(argv=None):
                          "to the bench JSON `superstep` section")
     ap.add_argument("--supersteps-per-launch", type=int, default=16,
                     help="K for pallas_resident in --superstep-bench")
+    ap.add_argument("--serve-bench", action="store_true",
+                    help="ONLY the solver-as-a-service benchmark "
+                         "(DESIGN.md §15): fixed-seed open-loop Poisson "
+                         "load through the continuous-batching "
+                         "scheduler; hard-fails on parity vs sequential "
+                         "Solver.solve, on no-batching, and on per-"
+                         "bucket recompiles; records go to the bench "
+                         "JSON `serving` section")
+    ap.add_argument("--serve-requests", type=int, default=50,
+                    help="trace length for --serve-bench")
+    ap.add_argument("--serve-rate", type=float, default=100.0,
+                    help="arrival rate (req/s) for --serve-bench")
     ap.add_argument("--dist-bench", action="store_true",
                     help="ONLY the distributed-EPS benchmark (DESIGN.md "
                          "§14): warm solve wall per mesh size with "
@@ -438,13 +542,26 @@ def main(argv=None):
                          "BENCH_propagation_smoke.json")
     args = ap.parse_args(argv)
     if args.json and not (args.zoo or args.zoo_smoke or args.throughput
-                          or args.superstep_bench or args.dist_bench):
-        ap.error("--json records the zoo/api/superstep/distributed "
-                 "sections; pass --zoo, --zoo-smoke, --throughput, "
-                 "--superstep-bench or --dist-bench")
+                          or args.superstep_bench or args.dist_bench
+                          or args.serve_bench):
+        ap.error("--json records the zoo/api/superstep/distributed/"
+                 "serving sections; pass --zoo, --zoo-smoke, "
+                 "--throughput, --superstep-bench, --dist-bench or "
+                 "--serve-bench")
     timeout = args.timeout or (300 if args.full else 30)
 
     rows = []
+    if args.serve_bench:
+        rows.append("serving,backend,requests,rate,buckets,ttfi_p50,"
+                    "ttfi_p99,lat_p50,lat_p99,occ_max,live_max,inst_s,"
+                    "parity")
+        records = run_serve_bench(rows, n_requests=args.serve_requests,
+                                  rate_rps=args.serve_rate,
+                                  backend=args.backend)
+        print("\n".join(rows))
+        if args.json:
+            merge_json(args.json, "serving", records)
+        return rows
     if args.dist_bench:
         rows.append("distributed,mesh,status,objective,warm,speedup,"
                     "steals,allreduce,parity")

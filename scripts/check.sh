@@ -16,13 +16,17 @@
 # tier-1), the superstep-orchestration bench (ms_per_superstep +
 # dispatches_per_solve per backend), the distributed-EPS bench (mesh
 # 1→8 on faked host devices: speedup vs mesh=1, steal events,
-# bound-all-reduce counts, DESIGN.md §14) and the docs check, writing
+# bound-all-reduce counts, DESIGN.md §14), the solver-serving bench
+# (fixed-seed open-loop Poisson load through the continuous-batching
+# scheduler, DESIGN.md §15) and the docs check, writing
 # BENCH_propagation_smoke.json (propagation rows + `solver` + `api` +
-# `superstep` + `distributed` sections) at the repo root so the perf
-# trajectory populates per PR.  The zoo smoke sweeps EVERY registered
-# backend, pallas_resident included, and hard-fails on any
+# `superstep` + `distributed` + `serving` sections) at the repo root so
+# the perf trajectory populates per PR.  The zoo smoke sweeps EVERY
+# registered backend, pallas_resident included, and hard-fails on any
 # proven-optimum mismatch between backends; the dist bench hard-fails
-# on any mesh losing status/objective parity with mesh=1.
+# on any mesh losing status/objective parity with mesh=1; the serving
+# bench hard-fails on parity vs sequential Solver.solve, on no request
+# ever batching, or on any bucket recompiling after its cold compile.
 #
 # Exit code: nonzero on ANY test failure, collection error or bench
 # failure.
@@ -78,6 +82,11 @@ echo "== distributed-EPS bench (mesh 1..8 on faked host devices, §14) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m benchmarks.bench_solver \
     --dist-bench --json BENCH_propagation_smoke.json || exit 1
+
+echo
+echo "== solver-serving bench (open-loop load, continuous batching, §15) =="
+python -m benchmarks.bench_solver \
+    --serve-bench --json BENCH_propagation_smoke.json || exit 1
 
 echo
 echo "== docs check (README/DESIGN references + quickstart dry-run) =="

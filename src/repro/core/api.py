@@ -99,6 +99,13 @@ class Progress:
     `SolveResult` in ``result``; earlier events report the running
     incumbent (``best_objective`` is None for satisfaction models or
     while no solution exists yet).
+
+    Timing contract (the ONE timing source, shared by the serving
+    metrics and the superstep bench): ``t_host`` is the absolute host
+    wall clock (``time.time()``) at event emission, ``wall_s`` is the
+    elapsed time since the solve started (so ``t_host - wall_s`` is the
+    solve's start stamp), and ``superstep`` is the cumulative superstep
+    counter — downstream consumers must not re-time chunks themselves.
     """
     superstep: int
     best_objective: Optional[int]
@@ -109,6 +116,7 @@ class Progress:
     wall_s: float
     final: bool = False
     result: Optional[SolveResult] = None
+    t_host: float = 0.0
 
 
 # --------------------------------------------------------------------------
@@ -684,7 +692,8 @@ class Solver:
             if not stop:
                 yield Progress(superstep=superstep, best_objective=obj,
                                has_solution=has, incumbent=incumbent,
-                               n_nodes=n_nodes, n_sols=n_sols, wall_s=wall)
+                               n_nodes=n_nodes, n_sols=n_sols, wall_s=wall,
+                               t_host=t0 + wall)
                 continue
             totals = S.lane_totals(st)
             # exhaustion, not gdone: a stop_on_first early-out sets gdone
@@ -698,7 +707,8 @@ class Solver:
             yield Progress(superstep=superstep, best_objective=res.objective,
                            has_solution=has, incumbent=res.solution,
                            n_nodes=res.n_nodes, n_sols=res.n_sols,
-                           wall_s=res.wall_s, final=True, result=res)
+                           wall_s=res.wall_s, final=True, result=res,
+                           t_host=t0 + res.wall_s)
             return
 
     # -- solve_many -------------------------------------------------------
@@ -719,6 +729,12 @@ class Solver:
 
         Returns one `SolveResult` per instance, in input order.
         ``wall_s`` is the shared batch wall clock.
+
+        Implemented as the degenerate case of the lane-owning `LaneBatch`
+        scheduler core (DESIGN.md §15): splice every instance into a
+        width-N batch up front, step until all slots are done, retire
+        each slot.  The serving scheduler (`repro.serve`) drives the same
+        class with continuous admission instead.
         """
         cms = list(cms)
         if not cms:
@@ -737,59 +753,267 @@ class Solver:
                 raise ValueError(
                     f"solve_many needs same-shape instances: instance {k} "
                     f"has signature {shape_signature(cm)} != {sig}")
-        cm0 = cms[0]
         N = len(cms)
 
         pools = [eps.decompose(cm, cfg.resolved_eps_target(), opts)
                  for cm in cms]
         smax = max(p[0].shape[0] for p in pools)
         size = _bucket(smax) if cfg.pad_pool else smax
-        padded = [eps.pad_pool(np.asarray(l), np.asarray(u), size)
-                  for l, u in pools]
-        subs_lb = jnp.asarray(np.stack([p[0] for p in padded]))
-        subs_ub = jnp.asarray(np.stack([p[1] for p in padded]))
 
-        cm_b = jax.tree.map(lambda *xs: jnp.stack(xs), *cms)
-        carry1 = _init_carry(cm0, cfg.n_lanes, opts,
-                             n_heads=_carry_heads(cfg, cm0, size))
-        carry = jax.tree.map(
-            lambda x: jnp.broadcast_to(x[None], (N,) + x.shape), carry1)
-
-        runner = self._runner_for(cm0, cfg, batched=True)
-        compiles0 = runner.n_compiles
         builds_before = self.stats["runner_builds"]
+        batch = LaneBatch(self, cms[0], cfg, width=N, pool_size=size)
+        compiles0 = batch.runner.n_compiles
+        for i, (cm, (pl, pu)) in enumerate(zip(cms, pools)):
+            batch.splice(i, cm, pl, pu, request_id=i)
         while True:
-            carry = jax.block_until_ready(runner(cm_b, subs_lb, subs_ub,
-                                                 carry))
-            st, gbest, gdone, it, _ = carry
+            snap = batch.step()
             wall = time.time() - t0
-            if bool(np.asarray(gdone).all()):
+            if snap.gdone.all():
                 break
             if cfg.timeout_s is not None and wall > cfg.timeout_s:
                 break
             if (cfg.max_supersteps is not None
-                    and int(np.asarray(it).max()) >= cfg.max_supersteps):
+                    and int(snap.superstep.max()) >= cfg.max_supersteps):
                 break
         self.stats["last_solve_cold"] = (
-            runner.n_compiles > compiles0
+            batch.runner.n_compiles > compiles0
             or self.stats["runner_builds"] > builds_before)
 
-        st, gbest, gdone, it, _ = carry
         wall = time.time() - t0
-        st = jax.device_get(st)       # one transfer for the whole batch
-        it = np.asarray(it)
-        results = []
-        for i in range(N):
-            sti = jax.tree.map(lambda x, i=i: x[i], st)
-            totals = S.lane_totals(sti)
-            # per-instance exhaustion (not gdone: see derive_result)
-            exhausted = bool(np.asarray(sti.done).all())
-            results.append(derive_result(
-                cms[i], sti.best_obj, sti.has_sol, sti.best_sol,
-                sti.incomplete, exhausted, totals["n_nodes"],
-                totals["n_fails"], totals["n_sols"], totals["n_sweeps"],
-                int(it[i]), wall))
-        return results
+        return [batch.retire(i, wall_s=wall) for i in range(N)]
+
+    # -- lane_batch: the continuous-batching scheduler core ---------------
+
+    def lane_batch(self, cm: CompiledModel, *, width: int,
+                   pool_size: Optional[int] = None,
+                   config: Optional[SolveConfig] = None,
+                   **overrides) -> "LaneBatch":
+        """A `LaneBatch` of ``width`` slots shaped for instances
+        signature-equal to ``cm`` — the lane-owning scheduler core the
+        serving layer (`repro.serve`, DESIGN.md §15) admits requests
+        into.  ``pool_size`` defaults to the pow2 bucket of the config's
+        EPS target, the fixed upper bound on any `eps.decompose` pool
+        for that target — so every admitted request's pool fits and the
+        bucket compiles at most once."""
+        cfg = self._config_for(config, overrides)
+        if pool_size is None:
+            tgt = cfg.resolved_eps_target()
+            pool_size = _bucket(tgt) if cfg.pad_pool else tgt
+        return LaneBatch(self, cm, cfg, width=width, pool_size=pool_size)
+
+
+# --------------------------------------------------------------------------
+# LaneBatch: the lane-owning continuous-batching core (DESIGN.md §15)
+# --------------------------------------------------------------------------
+
+_IDLE = object()          # slot-empty sentinel (request ids may be None)
+
+
+class BatchSnapshot(NamedTuple):
+    """Host-visible per-slot view of a `LaneBatch` after one quantum."""
+    superstep: np.ndarray    # i32[B] per-slot cumulative superstep counters
+    gdone: np.ndarray        # bool[B] per-slot global-done flags
+    best_obj: np.ndarray     # [B] per-slot incumbent bound (min over lanes)
+    has_sol: np.ndarray      # bool[B]
+    n_nodes: np.ndarray      # i[B] per-slot node totals
+    n_sols: np.ndarray       # i[B]
+    t_host: float            # host wall clock (time.time()) at snapshot
+
+
+class LaneBatch:
+    """A fixed-width batch of same-shape instance *slots* driven through
+    ONE vmapped chunk runner — the lane-owning scheduler core that
+    `_run_chunk`'s host loop became (DESIGN.md §15).
+
+    Each slot owns an ``n_lanes`` lane block, its own EPS pool rows
+    (``[pool_size, V]``), its own B&B bound and its own done flag; the
+    slot's ``request_id`` is what threads lane ownership back to a
+    serving request.  Slots **join** (`splice`) and **leave** (`retire`)
+    at chunk boundaries at *fixed compiled shape*: width ``B`` and pool
+    bucket ``pool_size`` never change after construction, so admission
+    and retirement never recompile — the vLLM-style continuous-batching
+    property the serving scheduler (`repro.serve`) relies on.
+
+    An idle slot is frozen: its ``gdone`` is True (the vmapped
+    `while_loop` counter stops), its lanes are all ``done`` (every
+    superstep is an idempotent no-op) and its pool rows are explicitly
+    failed stores (`eps.failed_pool`), so idle slots cannot explore
+    phantom subproblems.  `Solver.solve_many` is the degenerate
+    splice-all-then-drain use of this class.  Single-device only.
+    """
+
+    def __init__(self, session: Solver, cm0: CompiledModel,
+                 cfg: SolveConfig, *, width: int, pool_size: int):
+        if cfg.mesh is not None or cfg.mesh_shards is not None:
+            raise ValueError("LaneBatch (and solve_many on top of it) is "
+                             "single-device; it cannot be combined with a "
+                             "mesh config")
+        if width < 1 or pool_size < 1:
+            raise ValueError(f"LaneBatch needs width >= 1 and pool_size >= "
+                             f"1, got {width}, {pool_size}")
+        self.session = session
+        self.cfg = cfg
+        self.width = int(width)
+        self.pool_size = int(pool_size)
+        self.opts = cfg.search_options()
+        cm0 = _canonical(cm0)
+        self.signature = shape_signature(cm0)
+        self._obj_var, self._n_vars = cm0.obj_var, cm0.n_vars
+        self.runner = session._runner_for(cm0, cfg, batched=True)
+        # the live-slot template: what a spliced slot's carry is reset to
+        self._carry1 = _init_carry(cm0, cfg.n_lanes, self.opts,
+                                   n_heads=_carry_heads(cfg, cm0, pool_size))
+        # idle pool rows: explicitly-failed stores (inert by construction)
+        il, iu = eps.failed_pool(np.asarray(cm0.lb0), np.asarray(cm0.ub0),
+                                 pool_size)
+        self._idle_lb, self._idle_ub = jnp.asarray(il), jnp.asarray(iu)
+        B = self.width
+        self.cm_b = jax.tree.map(lambda x: jnp.stack([x] * B), cm0)
+        self.subs_lb = jnp.stack([self._idle_lb] * B)
+        self.subs_ub = jnp.stack([self._idle_ub] * B)
+        carry = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (B,) + x.shape),
+            self._carry1)
+        st, gbest, gdone, it, heads = carry
+        st = st._replace(done=jnp.ones_like(st.done),
+                         fresh=jnp.zeros_like(st.fresh))
+        self.carry = (st, gbest, jnp.ones_like(gdone), it, heads)
+        self.request_ids: List[Any] = [_IDLE] * B
+        self._cms: List[Optional[CompiledModel]] = [None] * B
+        self._host_st = None
+        self.n_spliced = 0
+        self.n_retired = 0
+
+    # -- occupancy ---------------------------------------------------------
+
+    def idle_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.request_ids) if r is _IDLE]
+
+    def live_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.request_ids) if r is not _IDLE]
+
+    @property
+    def occupancy(self) -> int:
+        return self.width - len(self.idle_slots())
+
+    @property
+    def obj_var(self) -> int:
+        """The bucket's objective column (static across the batch;
+        ``< 0`` for satisfaction models)."""
+        return self._obj_var
+
+    def request_id(self, i: int):
+        rid = self.request_ids[i]
+        return None if rid is _IDLE else rid
+
+    # -- join / leave at chunk boundaries ----------------------------------
+
+    def splice(self, i: int, cm: CompiledModel, subs_lb, subs_ub, *,
+               request_id=None) -> None:
+        """Admit an instance into idle slot ``i`` at fixed shape: its
+        tables overwrite the slot's rows of the stacked model pytree, its
+        pool is padded to the bucket (`eps.fit_pool`) and its carry slice
+        is reset to a fresh live state.  Takes effect at the next
+        `step` — the chunk boundary."""
+        if self.request_ids[i] is not _IDLE:
+            raise ValueError(f"slot {i} is occupied by request "
+                             f"{self.request_ids[i]!r}")
+        cm = _canonical(cm)
+        if shape_signature(cm) != self.signature:
+            raise ValueError(
+                f"instance signature {shape_signature(cm)} does not match "
+                f"this batch's bucket {self.signature}")
+        lb, ub = eps.fit_pool(np.asarray(subs_lb), np.asarray(subs_ub),
+                              self.pool_size)
+        self.cm_b = jax.tree.map(lambda full, one: full.at[i].set(one),
+                                 self.cm_b, cm)
+        self.subs_lb = self.subs_lb.at[i].set(jnp.asarray(lb))
+        self.subs_ub = self.subs_ub.at[i].set(jnp.asarray(ub))
+        self.carry = jax.tree.map(lambda full, one: full.at[i].set(one),
+                                  self.carry, self._carry1)
+        self.request_ids[i] = request_id
+        self._cms[i] = cm
+        self._host_st = None
+        self.n_spliced += 1
+
+    def retire(self, i: int, *, wall_s: float,
+               improvements: Tuple[Improvement, ...] = ()) -> SolveResult:
+        """Retire slot ``i``: derive its per-request `SolveResult` from
+        the slot's lane-state slice (per-slot exhaustion, per-slot
+        superstep counter), then freeze the slot idle.  Valid whether
+        the slot finished (``gdone``) or is being evicted early (a
+        deadline miss) — eviction derives from the live state *before*
+        freezing, so an incomplete search never claims OPTIMAL/UNSAT."""
+        if self.request_ids[i] is _IDLE:
+            raise ValueError(f"slot {i} is idle")
+        st = self._host_state()
+        sti = jax.tree.map(lambda x: x[i], st)
+        totals = S.lane_totals(sti)
+        exhausted = bool(np.asarray(sti.done).all())
+        superstep = int(np.asarray(self.carry[3])[i])
+        res = derive_result(
+            self._cms[i], sti.best_obj, sti.has_sol, sti.best_sol,
+            sti.incomplete, exhausted, totals["n_nodes"],
+            totals["n_fails"], totals["n_sols"], totals["n_sweeps"],
+            superstep, wall_s, tuple(improvements))
+        self._freeze(i)
+        self.request_ids[i] = _IDLE
+        self._cms[i] = None
+        self.n_retired += 1
+        return res
+
+    def _freeze(self, i: int) -> None:
+        """Park slot ``i``: gdone, all lanes done, all-failed pool —
+        every subsequent superstep on the slot is an idempotent no-op."""
+        st, gbest, gdone, it, heads = self.carry
+        st = st._replace(done=st.done.at[i].set(True),
+                         fresh=st.fresh.at[i].set(False))
+        self.carry = (st, gbest, gdone.at[i].set(True), it, heads)
+        self.subs_lb = self.subs_lb.at[i].set(self._idle_lb)
+        self.subs_ub = self.subs_ub.at[i].set(self._idle_ub)
+        self._host_st = None
+
+    # -- stepping ----------------------------------------------------------
+
+    def step(self) -> BatchSnapshot:
+        """Run ONE scheduler quantum (up to ``cfg.chunk`` supersteps per
+        live slot; one K-superstep launch under ``pallas_resident``) over
+        the whole batch and return the host-visible snapshot."""
+        self.carry = jax.block_until_ready(
+            self.runner(self.cm_b, self.subs_lb, self.subs_ub, self.carry))
+        self._host_st = None
+        return self.snapshot()
+
+    def snapshot(self) -> BatchSnapshot:
+        st, _, gdone, it, _ = self.carry
+        return BatchSnapshot(
+            superstep=np.asarray(it),
+            gdone=np.asarray(gdone),
+            best_obj=np.asarray(st.best_obj).min(axis=1),
+            has_sol=np.asarray(st.has_sol).any(axis=1),
+            n_nodes=np.asarray(st.n_nodes).sum(axis=1),
+            n_sols=np.asarray(st.n_sols).sum(axis=1),
+            t_host=time.time())
+
+    def _host_state(self):
+        if self._host_st is None:       # one transfer, reused per quantum
+            self._host_st = jax.device_get(self.carry[0])
+        return self._host_st
+
+    def incumbent(self, i: int):
+        """Slot ``i``'s current best ``(objective, solution)`` —
+        ``(None, None)`` while no solution exists; objective is None for
+        satisfaction models.  Same lane pick as `derive_result`."""
+        st = self._host_state()
+        has = np.asarray(st.has_sol[i]).reshape(-1)
+        if not has.any():
+            return None, None
+        sols = np.asarray(st.best_sol[i]).reshape(-1, self._n_vars)
+        if self._obj_var >= 0:
+            objs = np.asarray(st.best_obj[i]).reshape(-1)
+            k = int(objs.argmin())
+            return int(objs[k]), sols[k]
+        return None, sols[int(has.argmax())]
 
 
 # --------------------------------------------------------------------------

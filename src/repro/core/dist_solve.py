@@ -463,7 +463,8 @@ def solve_iter_dist(session, cm: CompiledModel, cfg: SolveConfig, *,
         if not stop:
             yield Progress(superstep=superstep, best_objective=obj,
                            has_solution=has, incumbent=incumbent,
-                           n_nodes=n_nodes, n_sols=n_sols, wall_s=wall)
+                           n_nodes=n_nodes, n_sols=n_sols, wall_s=wall,
+                           t_host=t0 + wall)
             continue
 
         # -- terminal result ------------------------------------------------
@@ -483,7 +484,8 @@ def solve_iter_dist(session, cm: CompiledModel, cfg: SolveConfig, *,
         yield Progress(superstep=superstep, best_objective=res.objective,
                        has_solution=has, incumbent=res.solution,
                        n_nodes=res.n_nodes, n_sols=res.n_sols,
-                       wall_s=res.wall_s, final=True, result=res)
+                       wall_s=res.wall_s, final=True, result=res,
+                       t_host=t0 + res.wall_s)
         return
 
 

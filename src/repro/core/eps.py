@@ -100,3 +100,36 @@ def pad_pool(subs_lb: np.ndarray, subs_ub: np.ndarray,
     fl[:, 0], fu[:, 0] = 1, 0
     return (np.concatenate([np.asarray(subs_lb), fl]),
             np.concatenate([np.asarray(subs_ub), fu]))
+
+
+def fit_pool(subs_lb: np.ndarray, subs_ub: np.ndarray,
+             size: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Fit a pool ``[S, V]`` to *exactly* ``size`` entries — the
+    fixed-shape splice used by the serving scheduler (DESIGN.md §15):
+    a `LaneBatch` slot's pool rows are a fixed ``[size, V]`` block of
+    the compiled batch, so an admitted request's pool must be padded up
+    (with inert failed stores, `pad_pool`) and can never exceed the
+    bucket size without forcing a recompile — that case raises instead.
+    """
+    s = int(subs_lb.shape[0])
+    if s > size:
+        raise ValueError(
+            f"pool of {s} subproblems does not fit the fixed bucket size "
+            f"{size}; decompose with a smaller eps_target or grow the "
+            f"bucket (which recompiles the batch runner)")
+    return pad_pool(np.asarray(subs_lb), np.asarray(subs_ub), size)
+
+
+def failed_pool(template_lb: np.ndarray, template_ub: np.ndarray,
+                size: int) -> Tuple[np.ndarray, np.ndarray]:
+    """An all-failed pool ``[size, V]`` (every store has ``lb[0] >
+    ub[0]``) — what an idle/retired `LaneBatch` slot holds so its lanes
+    drain in one superstep each and the slot freezes (DESIGN.md §15).
+    ``template_lb/ub`` supply the store dtype and width ``V`` (a ``[V]``
+    row or any ``[..., V]`` pool)."""
+    lb = np.asarray(template_lb).reshape(-1, np.asarray(template_lb).shape[-1])
+    ub = np.asarray(template_ub).reshape(-1, np.asarray(template_ub).shape[-1])
+    fl = np.repeat(lb[:1].copy(), size, axis=0)
+    fu = np.repeat(ub[:1].copy(), size, axis=0)
+    fl[:, 0], fu[:, 0] = 1, 0
+    return fl, fu

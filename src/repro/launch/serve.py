@@ -1,7 +1,13 @@
-"""Serving launcher: batched prefill + greedy decode demo.
+"""NN serving launcher: batched prefill + greedy decode demo.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \\
       --batch 4 --prompt-len 32 --gen 16
+
+Scope note: this serves the *neural-network scaffolding* (repro.nn token
+generation) and has nothing to do with serving the constraint solver.
+For solver-as-a-service — the continuous-batching request scheduler over
+`Solver.solve` with open-loop load generation and latency metrics
+(DESIGN.md §15) — use `repro.launch.serve_solver` instead.
 """
 
 from __future__ import annotations

@@ -1,0 +1,49 @@
+"""Solver-as-a-service (DESIGN.md §15): continuous batching across
+*requests*, not just across subproblems of one instance.
+
+TURBO's thesis is that the device stays saturated when it is fed many
+small independent units of work; the serving layer extends that property
+across callers.  `SolveRequest`s enter an async ingress queue
+(`serve/queue.py`), are bucketed by ``shape_signature`` × config into
+per-bucket continuous batches (`serve/scheduler.py`) built on the
+lane-owning `api.LaneBatch` core — late-arriving same-shape work joins
+at the next chunk boundary, finished requests retire early, vLLM-style —
+and per-request incumbent/`Progress` events stream back to callers
+(`serve/session.py`).  `serve/loadgen.py` is the open-loop synthetic
+load generator and `serve/metrics.py` the latency/occupancy recorder
+that make the throughput story honest (p50/p99 time-to-first-incumbent
+and time-to-optimal, queue depth, batch occupancy, instances/s).
+
+Quickstart::
+
+    from repro import serve, solver
+
+    with serve.SolverService(solver.SolveConfig.preset("prove")) as svc:
+        h1 = svc.submit(cm_a)                  # any thread
+        h2 = svc.submit(cm_b, deadline_s=30.0)
+        for ev in h1.events():                 # streamed incumbents
+            print(ev.superstep, ev.best_objective)
+        print(h2.result().status)
+
+or, single-threaded and deterministic (tests, benches, the
+`launch/serve_solver.py` CLI)::
+
+    sched = serve.SolverScheduler(cfg, max_batch=4)
+    handles = serve.run_open_loop(sched, serve.poisson_trace(50, 100.0))
+    print(sched.recorder.summary())
+"""
+
+from repro.serve.queue import SolveRequest, RequestQueue            # noqa: F401
+from repro.serve.metrics import MetricsRecorder                     # noqa: F401
+from repro.serve.scheduler import SolverScheduler                   # noqa: F401
+from repro.serve.session import RequestHandle, SolverService        # noqa: F401
+from repro.serve.loadgen import (Arrival, DEFAULT_MIX,              # noqa: F401
+                                 compile_arrival, poisson_trace,
+                                 run_open_loop)
+
+__all__ = [
+    "SolveRequest", "RequestQueue", "MetricsRecorder",
+    "SolverScheduler", "RequestHandle", "SolverService",
+    "Arrival", "DEFAULT_MIX", "compile_arrival", "poisson_trace",
+    "run_open_loop",
+]

@@ -1,0 +1,143 @@
+"""Open-loop synthetic load generator (DESIGN.md §15).
+
+*Open-loop* means arrivals are scheduled up front from a seeded Poisson
+process and submitted at their absolute offsets **independent of
+completions** — the generator never waits for the server, so queueing
+delay shows up honestly in the latency percentiles instead of being
+hidden by closed-loop self-throttling (the standard methodology caveat
+for serving benchmarks).
+
+A trace is a seeded mix over zoo models/sizes (≥2 distinct
+``shape_signature``s by default, so the scheduler's bucketing is
+actually exercised) with mixed deadlines.  `run_open_loop` drives a
+`SolverScheduler` on the host clock: submit every due arrival, run one
+scheduler quantum, repeat until the trace is exhausted and the queue
+drains.  Instance *models* are pre-compiled before the clock starts so
+host-side model building doesn't distort arrival timing (the solver's
+jit compiles still happen in-band — they are the cold-bucket cost the
+metrics are supposed to see).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import models as zoo
+from repro.serve.queue import SolveRequest
+from repro.serve.scheduler import SolverScheduler
+from repro.serve.session import RequestHandle
+
+# (zoo model, generate() kwargs, relative weight).  knapsack and
+# jobshop have different store widths and propagator banks, so the
+# default mix always produces >= 2 shape buckets — and both families'
+# shape signatures are *seed-stable* (instance contents vary per seed,
+# table shapes don't), so every request after a bucket's first lands
+# warm.  (coloring/rcpsp are deliberately absent: their edge counts are
+# seed-dependent, so each seed would cold-compile its own bucket.)
+DEFAULT_MIX: Tuple[Tuple[str, dict, float], ...] = (
+    ("knapsack", dict(n=6), 2.0),
+    ("jobshop", dict(n_jobs=2, n_machines=2), 1.0),
+)
+
+# deadline mix (seconds, None = no deadline), cycled over arrivals —
+# "mixed deadlines" without ever being tight enough to fire on a healthy
+# CI box (tight-deadline eviction is exercised by its own test)
+DEFAULT_DEADLINES: Tuple[Optional[float], ...] = (None, 120.0, 600.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One scheduled request: when it arrives and what it asks for."""
+    t_arrival: float                  # seconds after trace start
+    model: str                        # zoo model name
+    gen_kwargs: Tuple[Tuple[str, object], ...]
+    seed: int
+    deadline_s: Optional[float]
+
+    def generate(self):
+        return zoo.ZOO[self.model].generate(seed=self.seed,
+                                            **dict(self.gen_kwargs))
+
+
+def poisson_trace(n_requests: int, rate_rps: float, *, seed: int = 0,
+                  mix: Sequence[Tuple[str, dict, float]] = DEFAULT_MIX,
+                  deadlines: Sequence[Optional[float]] = DEFAULT_DEADLINES,
+                  ) -> List[Arrival]:
+    """A seeded open-loop trace: exponential inter-arrivals at
+    ``rate_rps`` requests/s, models drawn from ``mix`` by weight,
+    per-request instance seeds drawn from the same stream (so the whole
+    trace is reproducible from ``seed`` alone), deadlines cycled."""
+    if n_requests < 1 or not rate_rps > 0:
+        raise ValueError(f"need n_requests >= 1 and rate_rps > 0, got "
+                         f"{n_requests}, {rate_rps}")
+    rng = np.random.default_rng(seed)
+    names = [m for m, _, _ in mix]
+    w = np.asarray([float(x) for _, _, x in mix])
+    w = w / w.sum()
+    kwargs = {m: tuple(sorted(kw.items())) for m, kw, _ in mix}
+    t = 0.0
+    out = []
+    for k in range(n_requests):
+        t += float(rng.exponential(1.0 / rate_rps))
+        name = names[int(rng.choice(len(names), p=w))]
+        out.append(Arrival(
+            t_arrival=t, model=name, gen_kwargs=kwargs[name],
+            seed=int(rng.integers(0, 2 ** 31 - 1)),
+            deadline_s=deadlines[k % len(deadlines)] if deadlines else None))
+    return out
+
+
+def compile_arrival(arr: Arrival):
+    """Generate + build + compile the arrival's instance (host-side)."""
+    m, _ = zoo.ZOO[arr.model].build_model(arr.generate())
+    return m.compile()
+
+
+def run_open_loop(scheduler: SolverScheduler, trace: Sequence[Arrival], *,
+                  max_wall_s: Optional[float] = None,
+                  ) -> List[Tuple[Arrival, RequestHandle]]:
+    """Drive ``scheduler`` with ``trace`` on the host clock (open loop:
+    submission times never wait for the server) until every request has
+    retired.  Returns ``(arrival, handle)`` pairs in arrival order; each
+    handle's `result()` is immediately available on return."""
+    cms = [compile_arrival(a) for a in trace]      # off the clock
+    handles: List[Tuple[Arrival, RequestHandle]] = []
+    t0 = time.time()
+    i = 0
+    while i < len(trace) or scheduler.has_work():
+        if max_wall_s is not None and time.time() - t0 > max_wall_s:
+            raise TimeoutError(
+                f"open-loop run not drained within {max_wall_s}s "
+                f"({i}/{len(trace)} submitted, "
+                f"{scheduler.queue_depth()} queued)")
+        now = time.time() - t0
+        while i < len(trace) and trace[i].t_arrival <= now:
+            a = trace[i]
+            handles.append((a, scheduler.submit(SolveRequest(
+                cm=cms[i], request_id=f"r{i}", deadline_s=a.deadline_s,
+                meta=dict(model=a.model, seed=a.seed)))))
+            i += 1
+        if not scheduler.step() and i < len(trace):
+            # idle until the next arrival is due (open-loop pacing)
+            time.sleep(min(0.002, max(trace[i].t_arrival - (time.time() - t0),
+                                      0.0)))
+    return handles
+
+
+def sequential_reference(trace: Sequence[Arrival],
+                         config) -> Dict[str, Tuple[str, Optional[int]]]:
+    """The parity oracle: solve every trace request sequentially through
+    one warm `Solver` session and return ``request_id -> (status,
+    objective)`` — what the scheduler must reproduce bit-identically
+    (deadlines permitting)."""
+    from repro.core.api import Solver
+    sess = Solver(config)
+    out: Dict[str, Tuple[str, Optional[int]]] = {}
+    for k, arr in enumerate(trace):
+        res = sess.solve(compile_arrival(arr))
+        out[f"r{k}"] = (res.status, res.objective)
+    return out

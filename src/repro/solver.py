@@ -16,12 +16,19 @@ Module-level `solve` / `solve_many` / `solve_iter` use a process-wide
 default session, so casual callers still amortize compilation.  The
 legacy ``repro.core.engine.solve`` is a deprecation shim over this
 module.
+
+`LaneBatch` (via `Solver.lane_batch`) is the continuous-batching
+primitive underneath `solve_many`: a fixed-width compiled batch whose
+slots independent requests join (`splice`) and leave (`retire`) at chunk
+boundaries without recompiling.  The request-queue scheduler built on it
+lives in `repro.serve` (DESIGN.md §15).
 """
 
 from repro.core.api import (  # noqa: F401
     OPTIMAL, SAT, UNSAT, UNKNOWN,
     PRESETS, SolveConfig, Solver,
     SolveResult, Progress, Improvement,
+    BatchSnapshot, LaneBatch,
     default_solver, derive_result, shape_signature,
     solve, solve_iter, solve_many,
 )
@@ -30,6 +37,7 @@ __all__ = [
     "OPTIMAL", "SAT", "UNSAT", "UNKNOWN",
     "PRESETS", "SolveConfig", "Solver",
     "SolveResult", "Progress", "Improvement",
+    "BatchSnapshot", "LaneBatch",
     "default_solver", "derive_result", "shape_signature",
     "solve", "solve_iter", "solve_many",
 ]

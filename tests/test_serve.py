@@ -1,0 +1,372 @@
+"""Solver-as-a-service (repro.serve + api.LaneBatch, DESIGN.md §15):
+continuous-batching scheduler over mixed-shape request streams.
+
+Covers: mixed-shape concurrent admission (separate buckets, no
+warm-bucket recompile, bit-identical results vs sequential
+`Solver.solve` on every propagation backend), mid-flight warm joins at
+chunk boundaries, deadline expiry/eviction honesty (an evicted search
+never claims OPTIMAL/UNSAT), pool-padding inertness under continuous
+admission (no phantom subproblems from spliced/retired slots), seeded
+open-loop trace reproducibility, metrics math, and the threaded
+`SolverService` surface.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro import solver
+from repro.core import eps
+from repro.core import models as zoo
+from repro.serve import (MetricsRecorder, RequestQueue, SolveRequest,
+                         SolverScheduler, SolverService)
+from repro.serve import loadgen
+
+SMALL = dict(n_lanes=4, eps_target=8, chunk=8, max_depth=128)
+CFG = solver.SolveConfig.preset("prove", **SMALL)
+
+
+def _cm(name, seed):
+    m, _ = zoo.ZOO[name].build_model(zoo.small_instance(name, seed=seed))
+    return m.compile()
+
+
+@pytest.fixture(scope="module")
+def sess():
+    """One warm session shared by all gather-backend tests (the compile
+    cache is keyed by shape x config, so buckets compile once per
+    module, not once per test)."""
+    return solver.Solver(CFG)
+
+
+def _sequential(sess_or_cfg, cms):
+    s = (sess_or_cfg if isinstance(sess_or_cfg, solver.Solver)
+         else solver.Solver(sess_or_cfg))
+    return [s.solve(cm) for cm in cms]
+
+
+# -------------------------------------------------------------------------
+# mixed-shape concurrent admission (satellite: bucketing + parity)
+# -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ("gather", "scatter", "pallas"))
+def test_mixed_shapes_bucket_separately_and_match_sequential(backend):
+    cfg = CFG.replace(backend=backend)
+    cms = [_cm("knapsack", 0), _cm("jobshop", 0),
+           _cm("knapsack", 1), _cm("jobshop", 1)]
+    sched = SolverScheduler(cfg, max_batch=2)
+    handles = [sched.submit(SolveRequest(cm=cms[i], request_id=f"q{i}"))
+               for i in range(4)]
+    sched.run_until_drained(max_wall_s=600.0)
+
+    buckets = sched.buckets()
+    assert len(buckets) == 2, f"expected 2 shape buckets, got {buckets}"
+    for label, b in buckets.items():
+        assert b["n_requests"] == 2
+        # the warm request joined the bucket WITHOUT a recompile
+        assert b["n_compiles"] == 1, (label, b)
+
+    ref = _sequential(cfg, cms)
+    for h, r in zip(handles, ref):
+        res = h.result()
+        assert res.complete
+        assert (res.status, res.objective) == (r.status, r.objective)
+        if r.solution is None:
+            assert res.solution is None
+        else:
+            assert np.array_equal(res.solution, r.solution)
+
+
+def test_per_request_config_gets_its_own_bucket(sess):
+    cm = _cm("knapsack", 0)
+    sched = SolverScheduler(CFG, max_batch=2, session=sess)
+    h1 = sched.submit(SolveRequest(cm=cm, request_id="a"))
+    h2 = sched.submit(SolveRequest(cm=cm, request_id="b",
+                                   config=CFG.replace(n_lanes=2)))
+    sched.run_until_drained(max_wall_s=600.0)
+    assert len(sched.buckets()) == 2      # compile_key differs => new bucket
+    assert h1.result().status == h2.result().status == solver.OPTIMAL
+    assert h1.result().objective == h2.result().objective
+
+
+# -------------------------------------------------------------------------
+# LaneBatch: mid-flight joins + honest early retirement
+# -------------------------------------------------------------------------
+
+def test_lane_batch_midflight_join_no_recompile(sess):
+    """A second request joins the compiled batch at a chunk boundary
+    while the first is still searching; both results stay bit-identical
+    to sequential solves and nothing recompiles."""
+    cfg = CFG.replace(chunk=1)          # finest boundary: 1 superstep
+    cms = [_cm("knapsack", 0), _cm("knapsack", 1)]
+    batch = sess.lane_batch(cms[0], width=2, config=cfg)
+    opts = cfg.search_options()
+
+    def subs(cm):
+        return eps.decompose(cm, cfg.resolved_eps_target(), opts)
+
+    batch.splice(0, cms[0], *subs(cms[0]), request_id="first")
+    snap = batch.step()
+    assert not bool(snap.gdone[0]), "instance too easy for a 1-superstep " \
+                                    "chunk; pick a harder one"
+    compiles_before_join = batch.runner.n_compiles
+    batch.splice(1, cms[1], *subs(cms[1]), request_id="late")
+    while not bool(batch.snapshot().gdone.all()):
+        snap = batch.step()
+    assert batch.runner.n_compiles == compiles_before_join
+
+    t0 = time.time()
+    got = [batch.retire(i, wall_s=time.time() - t0) for i in (0, 1)]
+    ref = _sequential(cfg, cms)
+    for res, r in zip(got, ref):
+        assert res.complete
+        assert (res.status, res.objective) == (r.status, r.objective)
+        assert np.array_equal(res.solution, r.solution)
+    assert batch.occupancy == 0 and batch.n_retired == 2
+
+
+def test_lane_batch_early_retire_never_claims_complete(sess):
+    """Deadline-eviction honesty: retiring a slot before its search is
+    exhausted derives from the LIVE state (before the freeze), so the
+    result can be SAT/UNKNOWN but never a completed OPTIMAL/UNSAT."""
+    cfg = CFG.replace(chunk=1)
+    cm = _cm("knapsack", 0)
+    batch = sess.lane_batch(cm, width=2, config=cfg)
+    lb, ub = eps.decompose(cm, cfg.resolved_eps_target(),
+                           cfg.search_options())
+    batch.splice(0, cm, lb, ub, request_id="evict-me")
+    snap = batch.step()
+    assert not bool(snap.gdone[0])
+    res = batch.retire(0, wall_s=0.01)          # evict mid-search
+    assert not res.complete
+    assert res.status in (solver.SAT, solver.UNKNOWN)
+    if res.status == solver.SAT:
+        assert res.solution is not None
+    # the slot is reusable and a fresh solve on it is still correct
+    batch.splice(0, cm, lb, ub, request_id="again")
+    while not bool(batch.snapshot().gdone[0]):
+        batch.step()
+    res2 = batch.retire(0, wall_s=0.1)
+    ref = _sequential(cfg, [cm])[0]
+    assert res2.complete
+    assert (res2.status, res2.objective) == (ref.status, ref.objective)
+
+
+def test_lane_batch_slot_misuse_raises(sess):
+    cm = _cm("knapsack", 0)
+    batch = sess.lane_batch(cm, width=2)
+    lb, ub = eps.decompose(cm, CFG.resolved_eps_target(),
+                           CFG.search_options())
+    with pytest.raises(ValueError, match="idle"):
+        batch.retire(0, wall_s=0.0)
+    batch.splice(0, cm, lb, ub)
+    with pytest.raises(ValueError, match="occupied"):
+        batch.splice(0, cm, lb, ub)
+    with pytest.raises(ValueError, match="signature"):
+        batch.splice(1, _cm("jobshop", 0), lb, ub)
+
+
+# -------------------------------------------------------------------------
+# deadlines
+# -------------------------------------------------------------------------
+
+def test_deadline_expired_while_queued_is_unknown(sess):
+    """A request whose deadline elapses before it reaches a slot is
+    answered UNKNOWN/incomplete without ever occupying a slot."""
+    sched = SolverScheduler(CFG, max_batch=2, session=sess)
+    h = sched.submit(SolveRequest(cm=_cm("knapsack", 0),
+                                  request_id="late", deadline_s=1e-4))
+    time.sleep(0.01)                       # let the deadline pass queued
+    sched.run_until_drained(max_wall_s=60.0)
+    res = h.result()
+    assert res.status == solver.UNKNOWN and not res.complete
+    assert res.solution is None and res.n_nodes == 0
+    rec = sched.recorder.requests["late"]
+    assert rec.deadline_missed and rec.t_admit is None
+
+
+def test_scheduler_deadline_eviction_is_honest(sess):
+    """An admitted request evicted at its deadline retires incomplete
+    with its best anytime answer — never a claimed proof."""
+    cfg = CFG.replace(chunk=1)             # many quanta per solve
+    sched = SolverScheduler(cfg, max_batch=1, session=sess)
+    h = sched.submit(SolveRequest(cm=_cm("knapsack", 0),
+                                  request_id="tight", deadline_s=0.02))
+    sched.run_until_drained(max_wall_s=120.0)
+    res = h.result()
+    if res.complete:                       # solver won the race: fine
+        assert res.status in (solver.OPTIMAL, solver.UNSAT)
+    else:
+        assert res.status in (solver.SAT, solver.UNKNOWN)
+        assert sched.recorder.requests["tight"].deadline_missed
+
+
+def test_request_validation():
+    with pytest.raises(ValueError, match="deadline"):
+        SolveRequest(cm=None, deadline_s=0.0)
+    with pytest.raises(ValueError, match="deadline"):
+        SolveRequest(cm=None, deadline_s=-1.0)
+    a, b = SolveRequest(cm=None), SolveRequest(cm=None)
+    assert a.request_id != b.request_id    # auto ids stay distinct
+
+
+# -------------------------------------------------------------------------
+# pool padding stays inert under continuous admission (regression)
+# -------------------------------------------------------------------------
+
+def test_spliced_pool_padding_is_inert(sess):
+    """pow2-padded pools on spliced slots + all-failed pools on idle and
+    retired slots must add ZERO phantom subproblems: statuses,
+    objectives, solutions and solution COUNTS are identical to unpadded
+    sequential solves."""
+    cms = [_cm("knapsack", s) for s in range(3)]
+    ref = _sequential(CFG.replace(pad_pool=False), cms)
+
+    sched = SolverScheduler(CFG, max_batch=2, session=sess)  # pads to bucket
+    handles = [sched.submit(SolveRequest(cm=c, request_id=f"p{i}"))
+               for i, c in enumerate(cms)]
+    sched.run_until_drained(max_wall_s=600.0)
+    # 3 requests through 2 slots => at least one slot was retired and
+    # re-spliced with the padded pool of a different instance
+    (bucket,) = sched.buckets().values()
+    assert bucket["n_spliced"] == 3 and bucket["n_retired"] == 3
+    for h, r in zip(handles, ref):
+        res = h.result()
+        assert (res.status, res.objective) == (r.status, r.objective)
+        assert res.n_sols == r.n_sols, "padding contributed phantom sols"
+        assert np.array_equal(res.solution, r.solution)
+
+
+def test_fit_pool_and_failed_pool():
+    lb = np.zeros((3, 4), np.int32)
+    ub = np.ones((3, 4), np.int32)
+    flb, fub = eps.fit_pool(lb, ub, 8)
+    assert flb.shape == fub.shape == (8, 4)
+    assert np.array_equal(flb[:3], lb) and np.array_equal(fub[:3], ub)
+    assert (flb[3:, 0] > fub[3:, 0]).all()          # pads explicitly failed
+    with pytest.raises(ValueError, match="fit"):
+        eps.fit_pool(lb, ub, 2)
+    il, iu = eps.failed_pool(lb[0], ub[0], 5)
+    assert il.shape == iu.shape == (5, 4)
+    assert (il[:, 0] > iu[:, 0]).all()              # every row failed
+
+
+# -------------------------------------------------------------------------
+# open-loop load generation
+# -------------------------------------------------------------------------
+
+def test_poisson_trace_is_reproducible_and_mixed():
+    t1 = loadgen.poisson_trace(40, 100.0, seed=7)
+    t2 = loadgen.poisson_trace(40, 100.0, seed=7)
+    assert t1 == t2                                  # frozen dataclasses
+    assert t1 != loadgen.poisson_trace(40, 100.0, seed=8)
+    assert len({a.model for a in t1}) >= 2           # >= 2 shape buckets
+    assert {a.deadline_s for a in t1} == set(loadgen.DEFAULT_DEADLINES)
+    times = [a.t_arrival for a in t1]
+    assert times == sorted(times) and times[0] > 0.0
+    with pytest.raises(ValueError):
+        loadgen.poisson_trace(0, 100.0)
+    with pytest.raises(ValueError):
+        loadgen.poisson_trace(5, 0.0)
+
+
+def test_open_loop_smoke_matches_sequential(sess):
+    """Small end-to-end open-loop run: every completed request
+    bit-identical to the sequential reference, batching observed."""
+    trace = loadgen.poisson_trace(6, 200.0, seed=3)
+    sched = SolverScheduler(CFG, max_batch=2, session=sess)
+    handles = loadgen.run_open_loop(sched, trace, max_wall_s=600.0)
+    ref = loadgen.sequential_reference(trace, CFG)
+    for _, h in handles:
+        res = h.result()
+        assert res.complete
+        assert (res.status, res.objective) == ref[h.request.request_id]
+    s = sched.recorder.summary()
+    assert s["n_done"] == 6 and s["n_deadline_missed"] == 0
+    assert all(b["n_compiles"] <= 1 for b in sched.buckets().values())
+
+
+# -------------------------------------------------------------------------
+# metrics
+# -------------------------------------------------------------------------
+
+def test_metrics_summary_math():
+    class R:                                 # minimal SolveResult stand-in
+        def __init__(self, status, obj, complete):
+            self.status, self.objective = status, obj
+            self.complete, self.n_supersteps = complete, 5
+
+    m = MetricsRecorder()
+    m.record_submit("a", 100.0)
+    m.record_admit("a", "b0", 101.0)
+    m.record_first_incumbent("a", 102.0)
+    m.record_first_incumbent("a", 109.0)     # dedup: first one wins
+    m.record_done("a", R("OPTIMAL", 7, True), 103.0)
+    m.record_submit("b", 100.5)
+    m.record_admit("b", "b0", 100.5)
+    m.record_done("b", R("SAT", None, False), 104.5, deadline_missed=True)
+    m.sample_queue_depth(2)
+    m.sample_occupancy("b0", 2, 4)
+    s = m.summary()
+    assert s["n_requests"] == s["n_done"] == 2
+    assert s["n_deadline_missed"] == 1
+    assert s["statuses"] == {"OPTIMAL": 1, "SAT": 1}
+    assert s["ttfi_s"]["p50"] == 2.0         # 102 - 100, dedup held
+    assert s["latency_s"]["max"] == 4.0      # b: 104.5 - 100.5
+    assert s["tto_s"]["n"] == 1 and s["tto_s"]["p50"] == 3.0
+    assert s["queue_wait_s"]["max"] == 1.0
+    assert s["batch_occupancy"]["p50"] == 0.5
+    assert s["span_s"] == 4.5                # 100.0 .. 104.5
+    assert s["instances_per_sec"] == round(2 / 4.5, 2)
+
+
+def test_request_queue_thread_safety_smoke():
+    q = RequestQueue()
+    assert len(q) == 0 and q.drain() == []
+    q.push(1)
+    q.push(2)
+    assert len(q) == 2
+    assert q.drain() == [1, 2] and len(q) == 0
+
+
+# -------------------------------------------------------------------------
+# the Progress timing contract (shared with the superstep bench)
+# -------------------------------------------------------------------------
+
+def test_progress_t_host_is_the_single_timing_source(sess):
+    """`Progress.t_host` is the absolute host clock at emission and
+    `wall_s` the elapsed-since-solve-start clock; their difference is
+    the solve-start epoch, constant across the stream — the one timing
+    source the serving metrics and the superstep bench both consume."""
+    cm = _cm("knapsack", 0)
+    t_before = time.time()
+    events = list(sess.solve_iter(cm))
+    t_after = time.time()
+    assert events and events[-1].final
+    hosts = [ev.t_host for ev in events]
+    assert hosts == sorted(hosts)
+    assert all(t_before <= h <= t_after for h in hosts)
+    starts = [ev.t_host - ev.wall_s for ev in events]
+    assert max(starts) - min(starts) < 1e-6
+    assert events[-1].wall_s == events[-1].result.wall_s
+
+
+# -------------------------------------------------------------------------
+# threaded service surface
+# -------------------------------------------------------------------------
+
+def test_solver_service_threaded_submit_and_stream(sess):
+    cms = [_cm("knapsack", s) for s in range(3)]
+    ref = _sequential(sess, cms)
+    with SolverService(CFG, max_batch=2, session=sess) as svc:
+        handles = [svc.submit(c, request_id=f"t{i}")
+                   for i, c in enumerate(cms)]
+        events = list(handles[0].events(timeout=600.0))
+        assert events and events[-1].final
+        assert events[-1].result is not None
+        for h, r in zip(handles, ref):
+            res = h.result(timeout=600.0)
+            assert (res.status, res.objective) == (r.status, r.objective)
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(cms[0])
