@@ -44,6 +44,15 @@ sequential `Solver.solve` reference, slots actually batch (>1 request
 co-resident) and each bucket compiled at most once; p50/p99
 TTFI/latency, queue depth, occupancy and instances/s land in the
 `serving` section.
+
+``--scale-smoke`` is the sparse-bank scale metric (DESIGN.md §16):
+analytic dense-vs-sparse peak bank-tile bytes for nqueens N ∈ {32, 128,
+256, 512} (hard-failing unless the sparse O(M²) tile is strictly smaller
+than the dense O(N³) tile at N ≥ 128), forced dense/sparse
+objective-parity solves on smoke instances (hard-failing on any
+status/objective mismatch), and bounded large-tier throughput probes
+(props/s at the root fixpoint, nodes/s over a supersteps-capped solve);
+records land in the `scale` section.
 """
 
 from __future__ import annotations
@@ -467,6 +476,125 @@ def run_serve_bench(rows: List[str], *, n_requests: int = 50,
     return [rec]
 
 
+def run_scale_smoke(rows: List[str], timeout_s: float = 120.0,
+                    seed: int = 0):
+    """Scale-tier records (DESIGN.md §16) for the bench `scale` section.
+
+    Three bounded sub-parts (the make-check tier):
+
+    * ``bank_bytes`` — analytic per-lane tile scratch, dense O(N³) vs
+      sparse O(M²), for nqueens N ∈ {32, 128, 256, 512} via the same
+      estimators `compile.py`'s crossover and `kernels.vmem_budget`
+      use; **hard-fails** unless sparse < dense at N ≥ 128;
+    * ``parity`` — full proven solves of smoke-tier alldiff/cumulative
+      models under both *forced* layouts; **hard-fails** on any
+      status/objective mismatch (the dense/sparse determinism gate);
+    * ``large`` — the industrial-size tier compiled onto the auto
+      (sparse) layouts: root-fixpoint props/s and a supersteps-capped
+      solve's nodes/s per model (throughput probes, not proofs — the
+      proven-optimum run is the `large`-marked test).
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import fixpoint as F
+    from repro.core.compile import (alldiff_dense_tile_bytes,
+                                    alldiff_sparse_tile_bytes,
+                                    cumulative_dense_tile_bytes,
+                                    cumulative_sparse_tile_bytes)
+    from repro.core.models import nqueens as nq_mod
+
+    records = []
+
+    # ---- (a) peak bank-tile bytes, dense vs sparse ----------------------
+    for n in (32, 128, 256, 512):
+        m, _ = nq_mod.build_model(nq_mod.generate(n, seed=seed))
+        cm = m.compile()                        # auto crossover layout
+        it = cm.jdtype.itemsize
+        dense_b = alldiff_dense_tile_bytes(cm.n_alldiff, cm.ad_width, it)
+        sparse_b = alldiff_sparse_tile_bytes(cm.ad_packed, it)
+        rows.append(f"scale,bank_bytes,nqueens-{n},layout={cm.ad_layout},"
+                    f"dense={dense_b},sparse={sparse_b},"
+                    f"ratio={dense_b / max(sparse_b, 1):.1f}x")
+        records.append(dict(
+            kind="bank_bytes", model=f"nqueens-{n}", layout=cm.ad_layout,
+            ad_packed=cm.ad_packed, dense_tile_bytes=dense_b,
+            sparse_tile_bytes=sparse_b))
+        if n >= 128 and not sparse_b < dense_b:
+            raise SystemExit(
+                f"scale: sparse AllDifferent tile not smaller than the "
+                f"dense O(N³) tile at N={n}: {sparse_b} >= {dense_b}")
+
+    # ---- (b) dense vs sparse objective parity (hard gate) ---------------
+    for name in ("nqueens", "rcpsp"):
+        mod = zoo.ZOO[name]
+        inst = zoo.small_instance(name, seed=seed)
+        m, h = mod.build_model(inst)
+        out = {}
+        for layout in ("dense", "sparse"):
+            cm = m.compile(bank_layout=layout)
+            cfg = solver.SolveConfig.preset(
+                "prove", n_lanes=8, eps_target=16, timeout_s=timeout_s)
+            res = solver.Solver(cfg).solve(cm)
+            out[layout] = (res.status, res.objective)
+            checked = zoo.ground_check(mod, inst, h, res)
+            rows.append(f"scale,parity,{name},{layout},{res.status},"
+                        f"{res.objective},{checked}")
+            records.append(dict(
+                kind="parity", model=name, instance=inst.name,
+                layout=layout, status=res.status, objective=res.objective,
+                ground_check=checked))
+        if out["dense"] != out["sparse"]:
+            raise SystemExit(
+                f"scale: dense/sparse status/objective mismatch on "
+                f"{name}: {out}")
+
+    # ---- (c) large-tier throughput probes (auto = sparse layouts) -------
+    for name in ("nqueens", "rcpsp", "jobshop"):
+        inst = zoo.large_instance(name, seed=seed)
+        m, _ = zoo.ZOO[name].build_model(inst)
+        cm = m.compile()
+        it = cm.jdtype.itemsize
+        bank_bytes = dict(
+            alldiff=(alldiff_sparse_tile_bytes(cm.ad_packed, it)
+                     if cm.ad_layout == "sparse"
+                     else alldiff_dense_tile_bytes(cm.n_alldiff,
+                                                   cm.ad_width, it)),
+            cumulative=(cumulative_sparse_tile_bytes(cm.cu_packed, it)
+                        if cm.cu_layout == "sparse"
+                        else cumulative_dense_tile_bytes(
+                            cm.n_cumulative, cm.cu_width, cm.horizon, it)))
+        L = 4
+        lb = jnp.broadcast_to(cm.lb0[None], (L, cm.n_vars))
+        ub = jnp.broadcast_to(cm.ub0[None], (L, cm.n_vars))
+        F.fixpoint_batch(cm, lb, ub, max_iters=2)[0].block_until_ready()
+        t0 = time.time()
+        sweeps = int(np.asarray(
+            F.fixpoint_batch(cm, lb, ub, max_iters=8)[2]).sum())
+        wall = max(time.time() - t0, 1e-9)
+        props_per_sec = cm.total_props * sweeps / wall
+        cfg = solver.SolveConfig.preset(
+            "prove", n_lanes=4, eps_target=4, timeout_s=timeout_s,
+            max_supersteps=6)
+        res = solver.Solver(cfg).solve(cm)
+        rows.append(
+            f"scale,large,{inst.name},ad={cm.ad_layout},cu={cm.cu_layout},"
+            f"props/s={props_per_sec:.0f},nodes/s={res.nodes_per_sec:.0f},"
+            f"peak_bank_bytes={max(bank_bytes.values())}")
+        records.append(dict(
+            kind="large", model=name, instance=inst.name,
+            n_vars=cm.n_vars, n_props=cm.total_props,
+            ad_layout=cm.ad_layout, cu_layout=cm.cu_layout,
+            ad_packed=cm.ad_packed, cu_packed=cm.cu_packed,
+            peak_bank_tile_bytes=bank_bytes,
+            root_fixpoint_sweeps=sweeps,
+            props_per_sec=props_per_sec,
+            capped_solve_status=res.status,
+            nodes_per_sec=res.nodes_per_sec,
+            n_nodes=res.n_nodes, wall_s=res.wall_s))
+    return records
+
+
 def merge_json(path: str, section: str, records) -> None:
     """Merge `records` into `path` under `section`, preserving whatever
     the propagation smoke already wrote there."""
@@ -533,6 +661,15 @@ def main(argv=None):
                          "reduce counts; records go to the bench JSON "
                          "`distributed` section (run under XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--scale-smoke", action="store_true",
+                    help="ONLY the scale-tier benchmark (DESIGN.md §16): "
+                         "dense-vs-sparse peak bank-tile bytes for "
+                         "nqueens N∈{32..512} (hard-fails unless sparse "
+                         "< dense at N ≥ 128), forced dense/sparse "
+                         "objective-parity solves (hard-fails on "
+                         "mismatch), and large-tier props/s + nodes/s "
+                         "probes; records go to the bench JSON `scale` "
+                         "section")
     ap.add_argument("--eps-target", type=int, default=64,
                     help="EPS pool size for the zoo runs (DESIGN.md §9)")
     ap.add_argument("--json", default=None,
@@ -543,14 +680,23 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.json and not (args.zoo or args.zoo_smoke or args.throughput
                           or args.superstep_bench or args.dist_bench
-                          or args.serve_bench):
+                          or args.serve_bench or args.scale_smoke):
         ap.error("--json records the zoo/api/superstep/distributed/"
-                 "serving sections; pass --zoo, --zoo-smoke, "
-                 "--throughput, --superstep-bench, --dist-bench or "
-                 "--serve-bench")
+                 "serving/scale sections; pass --zoo, --zoo-smoke, "
+                 "--throughput, --superstep-bench, --dist-bench, "
+                 "--serve-bench or --scale-smoke")
     timeout = args.timeout or (300 if args.full else 30)
 
     rows = []
+    if args.scale_smoke:
+        rows.append("scale,kind,model,per-kind columns "
+                    "(bank_bytes|parity|large)")
+        records = run_scale_smoke(rows, timeout_s=timeout if args.timeout
+                                  else 120.0)
+        print("\n".join(rows))
+        if args.json:
+            merge_json(args.json, "scale", records)
+        return rows
     if args.serve_bench:
         rows.append("serving,backend,requests,rate,buckets,ttfi_p50,"
                     "ttfi_p99,lat_p50,lat_p99,occ_max,live_max,inst_s,"

@@ -22,11 +22,26 @@ def pytest_configure(config):
         "markers",
         "slow: long-running test (full-mesh dry-runs etc.); deselect with "
         "-m 'not slow'")
+    config.addinivalue_line(
+        "markers",
+        "large: scale-tier test (solves large_instance models end-to-end; "
+        "minutes, not seconds); skipped unless REPRO_RUN_LARGE=1 so "
+        "tier-1 stays fast")
     # the engine.solve shim's DeprecationWarning is an *error* suite-wide:
     # internal callers must use Solver sessions (tests/util.solve_session);
     # the shim tests in tests/test_api.py opt back in via catch_warnings
     config.addinivalue_line(
         "filterwarnings", "error:engine.solve is deprecated")
+
+
+def pytest_collection_modifyitems(config, items):
+    if os.environ.get("REPRO_RUN_LARGE"):
+        return
+    skip_large = pytest.mark.skip(
+        reason="scale-tier test; set REPRO_RUN_LARGE=1 to run")
+    for item in items:
+        if "large" in item.keywords:
+            item.add_marker(skip_large)
 
 
 @pytest.fixture(scope="session")

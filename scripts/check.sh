@@ -18,15 +18,20 @@
 # 1→8 on faked host devices: speedup vs mesh=1, steal events,
 # bound-all-reduce counts, DESIGN.md §14), the solver-serving bench
 # (fixed-seed open-loop Poisson load through the continuous-batching
-# scheduler, DESIGN.md §15) and the docs check, writing
+# scheduler, DESIGN.md §15), the scale-tier bench (sparse-vs-dense peak
+# bank-tile bytes, forced dense/sparse objective parity, large-tier
+# props/s + nodes/s probes, DESIGN.md §16) and the docs check, writing
 # BENCH_propagation_smoke.json (propagation rows + `solver` + `api` +
-# `superstep` + `distributed` + `serving` sections) at the repo root so
-# the perf trajectory populates per PR.  The zoo smoke sweeps EVERY
-# registered backend, pallas_resident included, and hard-fails on any
-# proven-optimum mismatch between backends; the dist bench hard-fails
-# on any mesh losing status/objective parity with mesh=1; the serving
-# bench hard-fails on parity vs sequential Solver.solve, on no request
-# ever batching, or on any bucket recompiling after its cold compile.
+# `superstep` + `distributed` + `serving` + `scale` sections) at the
+# repo root so the perf trajectory populates per PR.  The zoo smoke
+# sweeps EVERY registered backend, pallas_resident included, and
+# hard-fails on any proven-optimum mismatch between backends; the dist
+# bench hard-fails on any mesh losing status/objective parity with
+# mesh=1; the serving bench hard-fails on parity vs sequential
+# Solver.solve, on no request ever batching, or on any bucket
+# recompiling after its cold compile; the scale bench hard-fails unless
+# the sparse AllDifferent tile is strictly smaller than the dense O(N³)
+# tile at N ≥ 128 and on any dense/sparse status/objective mismatch.
 #
 # Exit code: nonzero on ANY test failure, collection error or bench
 # failure.
@@ -87,6 +92,11 @@ echo
 echo "== solver-serving bench (open-loop load, continuous batching, §15) =="
 python -m benchmarks.bench_solver \
     --serve-bench --json BENCH_propagation_smoke.json || exit 1
+
+echo
+echo "== scale bench (sparse banks: bytes, parity, large-tier probes, §16) =="
+python -m benchmarks.bench_solver \
+    --scale-smoke --json BENCH_propagation_smoke.json || exit 1
 
 echo
 echo "== docs check (README/DESIGN references + quickstart dry-run) =="

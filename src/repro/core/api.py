@@ -312,6 +312,7 @@ def shape_signature(cm: CompiledModel) -> tuple:
     return (cm.n_vars, cm.n_props, cm.k_terms, cm.d_occ,
             cm.n_alldiff, cm.ad_width, cm.ad_docc,
             cm.n_cumulative, cm.cu_width, cm.cu_docc, cm.horizon,
+            cm.ad_layout, cm.ad_packed, cm.cu_layout, cm.cu_packed,
             int(cm.branch_vars.shape[0]), cm.obj_var, cm.dtype)
 
 
@@ -322,8 +323,18 @@ def _canonical(cm: CompiledModel) -> CompiledModel:
 
 
 def _bucket(n: int) -> int:
-    """Next power of two ≥ n — the pool-size padding bucket."""
-    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+    """Pool-size padding bucket: next power of two ≥ n up to 1024, then
+    the next multiple of 1024.  Uncapped pow2 growth would let a
+    large-instance ``eps_target`` silently allocate a pool of padded
+    (explicitly failed, but still swept-over) stores up to ~2× the
+    request; the 1024-step cap bounds the overhead to < 1024 lanes while
+    keeping the bucket count — and thus the number of cached runner
+    traces — small (DESIGN.md §16)."""
+    if n <= 1:
+        return 1
+    if n <= 1024:
+        return 1 << (n - 1).bit_length()
+    return ((n + 1023) // 1024) * 1024
 
 
 # --------------------------------------------------------------------------

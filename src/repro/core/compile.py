@@ -14,6 +14,20 @@ Each bank gets its own variable-centric occurrence tables so every kind
 joins into the store by pure gathers (TPU-native, no atomics); each bank
 carries one trailing neutral dummy row that occurrence padding points at.
 
+Since ISSUE-9 the native banks also come in a **CSR-style packed view**
+(DESIGN.md §16): all members of all rows of a kind concatenated along one
+packed axis (``ad_pk_*``/``cu_pk_*`` with a segment id per member and
+``ad_ptr``/``cu_ptr`` row pointers), so the O(N³) dense Hall tensor and
+the dense ``[.., horizon]`` time grid can be replaced by O(M²) segmented
+tiles at scale.  The layout each bank's *tile* uses is chosen here at
+compile time (``bank_layout="auto"``): dense below `DENSE_TILE_MAX_BYTES`
+of estimated per-lane sweep scratch, sparse above — and the choice is a
+static field (`ad_layout`/`cu_layout`) that flows into
+`api.shape_signature`, so cached runners never mix layouts.  Both views
+are always emitted (the packed tables are O(model size)); forcing
+``bank_layout="dense"`` past `DENSE_TILE_HARD_BYTES` raises instead of
+letting XLA/Mosaic OOM opaquely.
+
 For the linear bank, two dual views of the same program are produced:
 
 * **propagator-centric** (`vidx/coef/rhs/bidx`): one row per propagator —
@@ -51,6 +65,67 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+# ---- dense-tile scratch estimates & layout crossover (DESIGN.md §16) ----
+# Per-lane sweep scratch of the *dense* tiles, in bytes.  These are the
+# allocations that explode with instance size (the bank tables themselves
+# are O(model) and always emitted).  Above DENSE_TILE_MAX_BYTES the auto
+# crossover flips the bank to the packed/segmented tile; a *forced* dense
+# bank above DENSE_TILE_HARD_BYTES raises instead of OOMing inside
+# XLA/Mosaic.  The same estimators feed `kernels.vmem_budget` and the
+# `scale` bench section so guard, budget, and bench agree on one number.
+DENSE_TILE_MAX_BYTES = 2 * 1024 * 1024
+DENSE_TILE_HARD_BYTES = 64 * 1024 * 1024
+
+
+def alldiff_dense_tile_bytes(n_alldiff: int, ad_width: int,
+                             itemsize: int) -> int:
+    """Per-lane scratch of `alldiff_candidates_tile`: the [A+1, N, N, N]
+    `inside` tensor plus the cnt/width reductions (~3 live copies)."""
+    if not n_alldiff:
+        return 0
+    return 3 * (n_alldiff + 1) * ad_width ** 3 * itemsize
+
+
+def cumulative_dense_tile_bytes(n_cumulative: int, cu_width: int,
+                                horizon: int, itemsize: int) -> int:
+    """Per-lane scratch of `cumulative_candidates_tile`: the
+    [C+1, T, horizon] run/contrib/feas grids (~4 live copies)."""
+    if not n_cumulative:
+        return 0
+    return 4 * (n_cumulative + 1) * cu_width * horizon * itemsize
+
+
+def alldiff_sparse_tile_bytes(ad_packed: int, itemsize: int) -> int:
+    """Per-lane scratch of `alldiff_candidates_sparse_tile`: a handful of
+    [M, M] pairwise tensors over the packed member axis (~6 live)."""
+    return 6 * ad_packed ** 2 * itemsize
+
+
+def cumulative_sparse_tile_bytes(cu_packed: int, itemsize: int) -> int:
+    """Per-lane scratch of `cumulative_candidates_sparse_tile`: event
+    arrays linear in M plus one [M, 2M] boolean overload reduction."""
+    return (2 * cu_packed ** 2) + 16 * cu_packed * itemsize
+
+
+def _resolve_layout(bank_layout: str, dense_bytes: int, kind: str,
+                    name: str) -> str:
+    """Pick this bank's tile layout; guard forced-dense explosions."""
+    if dense_bytes == 0:        # bank absent — layout is inert
+        return "dense"
+    if bank_layout == "sparse":
+        return "sparse"
+    if bank_layout == "auto" and dense_bytes > DENSE_TILE_MAX_BYTES:
+        return "sparse"
+    # dense selected (forced, or auto under the crossover)
+    if dense_bytes > DENSE_TILE_HARD_BYTES:
+        raise ValueError(
+            f"model '{name}': dense {kind} tile needs ~{dense_bytes:,} "
+            f"bytes of per-lane sweep scratch (> {DENSE_TILE_HARD_BYTES:,}"
+            " hard cap) — compile with bank_layout='sparse' (or 'auto') "
+            "to use the packed segmented tile instead (DESIGN.md §16)")
+    return "dense"
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class CompiledModel:
@@ -86,6 +161,19 @@ class CompiledModel:
     cu_cap: jax.Array       # i[C+1]     capacity
     cu_occ_inst: jax.Array  # i[V, Dcu]
     cu_occ_pos: jax.Array   # i[V, Dcu]
+    # CSR-style packed views of the native banks (DESIGN.md §16): members
+    # of all rows concatenated (row-contiguous, so member (a, n) sits at
+    # flat index ptr[a] + n and the dense occ tables double as flat
+    # indices); padding slots carry seg == n_rows (the dummy).
+    ad_ptr: jax.Array       # i[A+2]   row pointers into the packed axis
+    ad_pk_var: jax.Array    # i[Mad]   packed member var index
+    ad_pk_off: jax.Array    # i[Mad]   packed member offset
+    ad_pk_seg: jax.Array    # i[Mad]   owning row; == A for padding
+    cu_ptr: jax.Array       # i[C+2]
+    cu_pk_svar: jax.Array   # i[Mcu]
+    cu_pk_dur: jax.Array    # i[Mcu]
+    cu_pk_dem: jax.Array    # i[Mcu]
+    cu_pk_seg: jax.Array    # i[Mcu]   owning row; == C for padding
     # search
     branch_vars: jax.Array  # i[B] decision vars in branching order
     # static metadata
@@ -100,6 +188,12 @@ class CompiledModel:
     cu_width: int = dataclasses.field(metadata=dict(static=True))
     cu_docc: int = dataclasses.field(metadata=dict(static=True))
     horizon: int = dataclasses.field(metadata=dict(static=True))
+    # tile layout per native bank ("dense" | "sparse") + packed lengths;
+    # static so the choice shapes the trace and the runner cache key
+    ad_layout: str = dataclasses.field(metadata=dict(static=True))
+    cu_layout: str = dataclasses.field(metadata=dict(static=True))
+    ad_packed: int = dataclasses.field(metadata=dict(static=True))
+    cu_packed: int = dataclasses.field(metadata=dict(static=True))
     obj_var: int = dataclasses.field(metadata=dict(static=True))  # -1 if satisfaction
     dtype: str = dataclasses.field(metadata=dict(static=True))
     name: str = dataclasses.field(metadata=dict(static=True))
@@ -121,7 +215,12 @@ def compile_model(
     pad_occ_to: int = 8,
     pad_horizon_to: int = 32,
     force_dtype: str | None = None,
+    bank_layout: str = "auto",
 ) -> CompiledModel:
+    if bank_layout not in ("auto", "dense", "sparse"):
+        raise ValueError(
+            f"bank_layout must be 'auto', 'dense' or 'sparse', "
+            f"got {bank_layout!r}")
     V = m.n_vars
     props: List[ReifLinLe] = m.props
     P = len(props)
@@ -192,6 +291,25 @@ def compile_model(
             ad_occ_inst[v, d] = a
             ad_occ_pos[v, d] = n
 
+    # packed (CSR) view: row-contiguous members; always ≥ 1 padding slot
+    # so the dummy occurrence (inst=A, pos=0) lands at flat ad_ptr[A]
+    mad_real = sum(len(ad.vars) for ad in m.alldiffs)
+    Mad = max(_round_up(mad_real + 1, 8), 8)
+    ad_ptr = np.zeros((A + 2,), dtype=np.int64)
+    ad_pk_var = np.zeros((Mad,), dtype=np.int64)
+    ad_pk_off = np.zeros((Mad,), dtype=np.int64)
+    ad_pk_seg = np.full((Mad,), A, dtype=np.int64)
+    k_ = 0
+    for a, ad in enumerate(m.alldiffs):
+        ad_ptr[a] = k_
+        for v, off in zip(ad.vars, ad.offsets):
+            ad_pk_var[k_] = v
+            ad_pk_off[k_] = off
+            ad_pk_seg[k_] = a
+            k_ += 1
+    ad_ptr[A] = k_          # padding region start
+    ad_ptr[A + 1] = Mad
+
     # ---- cumulative bank (DESIGN.md §12) -------------------------------
     C = len(m.cumulatives)
     T = max((len(cu.starts) for cu in m.cumulatives), default=2)
@@ -203,6 +321,13 @@ def compile_model(
     cu_occs: List[List[Tuple[int, int]]] = [[] for _ in range(V)]
     horizon = 1
     for c, cu in enumerate(m.cumulatives):
+        if cu.capacity < 0:
+            # the segmented profile only inspects event intervals, so a
+            # negative cap (0 > cap on empty time) would need the whole
+            # grid; dense fails everywhere — reject the degenerate model
+            raise ValueError(
+                f"cumulative row {c} has negative capacity "
+                f"{cu.capacity}; capacities must be >= 0")
         cu_cap[c] = cu.capacity
         for t, (v, d_, r_) in enumerate(zip(cu.starts, cu.durations,
                                             cu.demands)):
@@ -236,6 +361,26 @@ def compile_model(
             cu_occ_inst[v, d] = c
             cu_occ_pos[v, d] = t
 
+    # packed (CSR) view of the cumulative bank (same invariants as ad_*)
+    mcu_real = sum(len(cu.starts) for cu in m.cumulatives)
+    Mcu = max(_round_up(mcu_real + 1, 8), 8)
+    cu_ptr = np.zeros((C + 2,), dtype=np.int64)
+    cu_pk_svar = np.zeros((Mcu,), dtype=np.int64)
+    cu_pk_dur = np.zeros((Mcu,), dtype=np.int64)
+    cu_pk_dem = np.zeros((Mcu,), dtype=np.int64)
+    cu_pk_seg = np.full((Mcu,), C, dtype=np.int64)
+    k_ = 0
+    for c, cu in enumerate(m.cumulatives):
+        cu_ptr[c] = k_
+        for v, d_, r_ in zip(cu.starts, cu.durations, cu.demands):
+            cu_pk_svar[k_] = v
+            cu_pk_dur[k_] = d_
+            cu_pk_dem[k_] = r_
+            cu_pk_seg[k_] = c
+            k_ += 1
+    cu_ptr[C] = k_
+    cu_ptr[C + 1] = Mcu
+
     # ---- dtype selection with overflow headroom ------------------------
     absmax = np.maximum(np.abs(lb0), np.abs(ub0)) + 1           # per var
     worst = int((np.abs(coef[:P]) * absmax[vidx[:P]]).sum(axis=1).max()) \
@@ -249,6 +394,8 @@ def compile_model(
     if C:
         worst = max(worst, horizon + 2,
                     int(cu_dem[:C].sum(axis=1).max()), int(cu_cap[:C].max()))
+    # sparse tiles compare member *counts* against interval widths
+    worst = max(worst, Mad, Mcu)
     if force_dtype is not None:
         dtype = force_dtype
     elif worst * 4 < np.iinfo(np.int32).max:
@@ -267,6 +414,15 @@ def compile_model(
         raise OverflowError(
             f"model '{m.name}' needs int64 headroom (worst sum {worst}); "
             "set JAX_ENABLE_X64=1 or pass force_dtype after re-scaling")
+
+    # ---- per-bank tile layout (decided after dtype: bytes need itemsize)
+    itemsize = np.dtype(dtype).itemsize
+    ad_layout = _resolve_layout(
+        bank_layout, alldiff_dense_tile_bytes(A, N, itemsize),
+        "AllDifferent", m.name)
+    cu_layout = _resolve_layout(
+        bank_layout, cumulative_dense_tile_bytes(C, T, horizon, itemsize),
+        "Cumulative", m.name)
     # leaves are jnp so the tables work when closed over (not jit args)
     cast = lambda a: jnp.asarray(np.asarray(a, dtype=dtype))  # noqa: E731
     return CompiledModel(
@@ -279,10 +435,17 @@ def compile_model(
         cu_svar=cast(cu_svar), cu_dur=cast(cu_dur), cu_dem=cast(cu_dem),
         cu_cap=cast(cu_cap),
         cu_occ_inst=cast(cu_occ_inst), cu_occ_pos=cast(cu_occ_pos),
+        ad_ptr=cast(ad_ptr), ad_pk_var=cast(ad_pk_var),
+        ad_pk_off=cast(ad_pk_off), ad_pk_seg=cast(ad_pk_seg),
+        cu_ptr=cast(cu_ptr), cu_pk_svar=cast(cu_pk_svar),
+        cu_pk_dur=cast(cu_pk_dur), cu_pk_dem=cast(cu_pk_dem),
+        cu_pk_seg=cast(cu_pk_seg),
         branch_vars=cast(np.asarray(branch)),
         n_vars=V, n_props=P, k_terms=K, d_occ=D,
         n_alldiff=A, ad_width=N, ad_docc=Dad,
         n_cumulative=C, cu_width=T, cu_docc=Dcu, horizon=horizon,
+        ad_layout=ad_layout, cu_layout=cu_layout,
+        ad_packed=Mad, cu_packed=Mcu,
         obj_var=(m.objective if m.objective is not None else -1),
         dtype=dtype, name=m.name,
     )

@@ -87,10 +87,18 @@ def pad_pool(subs_lb: np.ndarray, subs_ub: np.ndarray,
     single superstep and re-arms, so statuses/objectives are unchanged.
 
     Used by the session API for two shape-stabilization jobs
-    (DESIGN.md §11): bucketing pool sizes to powers of two so the
-    compiled runner is reused across instances whose decompositions
-    differ slightly, and rounding the pool to a device-count multiple
-    for the sharded mesh engine.  ``size <= S`` is a no-op.
+    (DESIGN.md §11): bucketing pool sizes (`api._bucket`: powers of two
+    up to 1024, then multiples of 1024 — capped so a 10³-variable model
+    with a large ``eps_target`` can't silently allocate a pool ~2× the
+    request, DESIGN.md §16) so the compiled runner is reused across
+    instances whose decompositions differ slightly, and rounding the
+    pool to a device-count multiple for the sharded mesh engine.
+    ``size <= S`` is a no-op.
+
+    The padded rows are inert under BOTH bank layouts: failure is
+    carried by store row 0 (``lb[0] > ub[0]``), which the per-lane
+    fixpoint masking freezes before any kind tile — dense or sparse —
+    ever sweeps the lane (asserted by `tests/test_sparse_tiles.py`).
     """
     s = subs_lb.shape[0]
     if size <= s:

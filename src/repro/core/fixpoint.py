@@ -238,6 +238,200 @@ def cumulative_candidates_tile(lb, ub, cu_svar, cu_dur, cu_dem, cu_cap,
     return cand_lb, cand_ub
 
 
+def alldiff_candidates_sparse_tile(lb, ub, ad_pk_var, ad_pk_off, ad_pk_seg,
+                                   n_alldiff: int
+                                   ) -> Tuple[jax.Array, jax.Array]:
+    """Segmented (packed/CSR) Hall-interval pass — the scale variant of
+    `alldiff_candidates_tile` (DESIGN.md §16).
+
+    Same bounds(Z) semantics, O(M²) scratch instead of O(A·N³): members
+    of ALL rows live on one packed axis of length M with a segment id
+    each (padding slots carry seg == n_alldiff and stay inert).  Members
+    are lexsorted by (segment, lb endpoint); the count
+    ``|{k : dom(y_k) ⊆ [a_i, b_j]}|`` then becomes a reversed-cumsum
+    suffix lookup: with T[p, j] = [seg_p = seg_j ∧ yu_p ≤ yu_j] and
+    S = suffix-sum of T over p, cnt(i, j) = S[first_pos(i), j] where
+    first_pos counts strictly-smaller (seg, yl) keys — tie-invariant, so
+    the (unstable) sort cannot affect results and every backend stays
+    bit-identical.  Hall intervals are folded to two O(M) extremal
+    tables (min inf per sup; max sup per inf) before the push pass, so
+    no O(M³) tensor is ever built.  Bit-equal to the dense tile per
+    member on non-failed stores (the only stores the engines sweep).
+
+    Returns (cand_lb, cand_ub), each ``[L, M]`` over the packed axis in
+    *unshifted* variable space.
+    """
+    dt = lb.dtype
+    neu_ub, neu_lb = _neutrals(dt)
+    off = ad_pk_off[None]                                   # [1, M]
+    yl = jnp.take(lb, ad_pk_var, axis=1) + off              # [L, M]
+    yu = jnp.take(ub, ad_pk_var, axis=1) + off
+    segb = jnp.broadcast_to(ad_pk_seg[None], yl.shape)
+
+    perm = jnp.lexsort((yl, segb), axis=-1)                 # seg-major, then yl
+    inv = jnp.argsort(perm, axis=-1)
+    syl = jnp.take_along_axis(yl, perm, axis=1)
+    syu = jnp.take_along_axis(yu, perm, axis=1)
+    sseg = jnp.take_along_axis(segb, perm, axis=1)
+    sact = sseg < n_alldiff
+
+    same = sseg[:, :, None] == sseg[:, None, :]             # [L, M, M]
+    a_i = syl[:, :, None]               # interval inf from i (axis 1)
+    b_j = syu[:, None, :]               # interval sup from j (axis 2)
+
+    # suffix count: S[p, j] = |{x ≥ p : seg_x = seg_j ∧ yu_x ≤ yu_j}|
+    T = (same & (syu[:, :, None] <= syu[:, None, :])).astype(dt)
+    S = jnp.flip(jnp.cumsum(jnp.flip(T, axis=1), axis=1), axis=1)
+    # first sorted position of i's key = |{p : (seg_p, yl_p) < (seg_i, yl_i)}|
+    lt = ((sseg[:, None, :] < sseg[:, :, None])
+          | (same & (syl[:, None, :] < syl[:, :, None])))   # [L, i, p]
+    fp = lt.sum(axis=2).astype(jnp.int32)                   # [L, M]
+    cnt = jnp.take_along_axis(
+        S, jnp.broadcast_to(fp[:, :, None], S.shape), axis=1)  # [L, i, j]
+
+    pair_ok = same & sact[:, :, None] & sact[:, None, :] & (a_i <= b_j)
+    width = b_j - a_i + 1
+    overflow = pair_ok & (cnt > width)
+    hall = pair_ok & (cnt == width)
+
+    # extremal Hall data: tightest inf per sup endpoint j, and widest sup
+    # per inf endpoint i — all O(M) per lane after the fold
+    min_inf = jnp.where(hall, jnp.broadcast_to(a_i, hall.shape),
+                        neu_ub).min(axis=1)                 # [L, M] per j
+    max_sup = jnp.where(hall, jnp.broadcast_to(b_j, hall.shape),
+                        neu_lb).max(axis=2)                 # [L, M] per i
+
+    # lb push for member k: ∃ Hall I = [a_i, b_j] with a_i ≤ yl_k ≤ b_j < yu_k
+    #   ⇔ ∃j same-seg: min_inf_j ≤ yl_k ≤ b_j < yu_k   → yl_k ↦ b_j + 1
+    yl_k, yu_k = syl[:, :, None], syu[:, :, None]           # k on axis 1
+    s_lb = jnp.where(same & sact[:, :, None]
+                     & (min_inf[:, None, :] <= yl_k)
+                     & (yl_k <= b_j) & (b_j < yu_k),
+                     b_j + 1, neu_lb).max(axis=2)           # [L, M]
+    # ub push, mirrored: yl_k < a_i ≤ yu_k ≤ max_sup_i  → yu_k ↦ a_i - 1
+    a_i2 = syl[:, None, :]                                  # i on axis 2
+    s_ub = jnp.where(same & sact[:, :, None]
+                     & (yl_k < a_i2) & (a_i2 <= yu_k)
+                     & (yu_k <= max_sup[:, None, :]),
+                     a_i2 - 1, neu_ub).min(axis=2)
+
+    # pigeonhole overflow fails every member of the affected row
+    rowfail = overflow.any(axis=2)                          # [L, M] per i
+    failk = jnp.any(same & rowfail[:, None, :], axis=2)     # [L, M] per k
+    s_lb = jnp.where(failk & sact, -neu_lb, s_lb)
+
+    # unsort to packed order, then back to unshifted variable space
+    cand_lb = jnp.take_along_axis(s_lb, inv, axis=1) - off
+    cand_ub = jnp.take_along_axis(s_ub, inv, axis=1) - off
+    return cand_lb, cand_ub
+
+
+def cumulative_candidates_sparse_tile(lb, ub, cu_pk_svar, cu_pk_dur,
+                                      cu_pk_dem, cu_pk_seg, cu_cap,
+                                      n_cumulative: int
+                                      ) -> Tuple[jax.Array, jax.Array]:
+    """Event-based time-table pass — the scale variant of
+    `cumulative_candidates_tile` (DESIGN.md §16).
+
+    Same compulsory-part semantics, never materialises the ``[.., T,
+    horizon]`` grid: each effective task with a compulsory part emits two
+    events (+q at lst, −q at ect); events lexsorted by (segment, time,
+    end-before-start) give the piecewise-constant profile as one global
+    cumsum (per-seg exact because each segment's deltas sum to 0 under
+    the seg-major sort).  Consecutive same-segment events bound disjoint
+    constant-profile intervals [u, v); empty ones (u == v) are guarded
+    off.  Overload and per-task forbidden windows are tested per
+    interval, and the first/last feasible start is found by one forward
+    and one backward `lax.scan` over the 2M events with a monotone jump
+    carry — single-pass exact because the intervals are disjoint and
+    sorted.  Bit-equal to the dense tile per task on non-failed stores.
+
+    Returns (cand_lb, cand_ub), each ``[L, M]`` over the packed axis.
+    """
+    dt = lb.dtype
+    neu_ub, neu_lb = _neutrals(dt)
+    zero = jnp.asarray(0, dt)
+    M = cu_pk_svar.shape[0]
+    seg = cu_pk_seg
+    d = cu_pk_dur[None]                                     # [1, M]
+    q = cu_pk_dem[None]
+    act = (seg < n_cumulative)[None] & (d > 0) & (q > 0)
+    cap = jnp.take(cu_cap, seg)[None]                       # [1, M] per task
+    est = jnp.take(lb, cu_pk_svar, axis=1)                  # [L, M]
+    lst = jnp.take(ub, cu_pk_svar, axis=1)
+    ect = est + d
+    has_cp = act & (lst < ect)                              # compulsory part
+
+    times = jnp.concatenate([lst, ect], axis=1)             # [L, 2M]
+    delta = jnp.concatenate([jnp.where(has_cp, q, zero),
+                             jnp.where(has_cp, -q, zero)], axis=1)
+    esegb = jnp.broadcast_to(
+        jnp.concatenate([seg, seg])[None], times.shape)
+    # ends sort before starts at equal times: transient profiles are then
+    # confined to empty [t, t) intervals, which the u < v guard disables
+    kindb = jnp.broadcast_to(jnp.concatenate(
+        [jnp.ones((M,), jnp.int32), jnp.zeros((M,), jnp.int32)])[None],
+        times.shape)
+    perm = jnp.lexsort((kindb, times, esegb), axis=-1)      # seg, time, kind
+    stime = jnp.take_along_axis(times, perm, axis=1)
+    sdelta = jnp.take_along_axis(delta, perm, axis=1)
+    sseg = jnp.take_along_axis(esegb, perm, axis=1)
+    prof = jnp.cumsum(sdelta, axis=1)                       # [L, 2M]
+
+    # event e owns [u, v) up to the next event while it stays in-segment;
+    # the last event of a segment owns an empty (disabled) interval
+    nxt_t = jnp.concatenate([stime[:, 1:], stime[:, -1:]], axis=1)
+    nxt_s = jnp.concatenate(
+        [sseg[:, 1:], jnp.full_like(sseg[:, -1:], -1)], axis=1)
+    u_t = stime
+    v_t = jnp.where(nxt_s == sseg, nxt_t, stime)
+    over_e = (u_t < v_t) & (prof > jnp.take(cu_cap, sseg))  # [L, 2M]
+    # per-task overload: any overloaded interval in my segment
+    ovl = jnp.any((sseg[:, None, :] == seg[None, :, None])
+                  & over_e[:, None, :], axis=2)             # [L, M]
+
+    # forbidden-window scans: task t cannot run through interval [u, v)
+    # if profile₋t + q_t > cap there (profile₋t removes t's own
+    # compulsory part, tested at u only — CP endpoints are events, so
+    # coverage is constant on [u, v))
+    def _bad(u_, v_, p_, sg):
+        segok = sg[:, None] == seg[None, :]                 # [L, M]
+        cov = has_cp & (u_ >= lst) & (u_ < ect)
+        return (segok & act & (u_ < v_)
+                & (p_ + jnp.where(cov, zero, q) > cap))
+
+    def fwd(s, ev):
+        u, v, p, sg = ev
+        u_, v_, p_ = u[:, None], v[:, None], p[:, None]
+        hit = _bad(u_, v_, p_, sg) & (s < v_) & (s + d > u_)
+        return jnp.where(hit, v_, s), None
+
+    def bwd(s, ev):
+        u, v, p, sg = ev
+        u_, v_, p_ = u[:, None], v[:, None], p[:, None]
+        hit = _bad(u_, v_, p_, sg) & (s < v_) & (s + d > u_)
+        return jnp.where(hit, u_ - d, s), None
+
+    xs = (jnp.moveaxis(u_t, 1, 0), jnp.moveaxis(v_t, 1, 0),
+          jnp.moveaxis(prof, 1, 0), jnp.moveaxis(sseg, 1, 0))
+    s_est, _ = lax.scan(fwd, est, xs)                # first feasible ≥ est
+    s_lst, _ = lax.scan(bwd, lst, xs, reverse=True)  # last feasible ≤ lst
+
+    cand_lb = s_est
+    # no feasible start ≥ 0 ⇒ dense's max over an empty set = −big
+    cand_ub = jnp.where(s_lst >= 0, s_lst, -neu_ub + zero)
+    # a lone task over capacity: every start is forbidden (dense marks the
+    # whole grid bad; events only cover [first, last) — special-case it)
+    qbig = act & (q > cap)
+    cand_lb = jnp.where(qbig, -neu_lb + zero, cand_lb)
+    cand_ub = jnp.where(qbig, -neu_ub + zero, cand_ub)
+    cand_lb = jnp.where(act, cand_lb, neu_lb + zero)
+    cand_ub = jnp.where(act, cand_ub, neu_ub + zero)
+    # overload: fail every effective task of the row
+    cand_lb = jnp.where(ovl & act, -neu_lb + zero, cand_lb)
+    return cand_lb, cand_ub
+
+
 def _gather_join(cand_lb, cand_ub, occ_inst, occ_pos, L):
     """Variable-centric join of one bank's candidates: each var reduces
     over its occurrence list (pure gather — no scatter, no atomics)."""
@@ -251,11 +445,25 @@ def _gather_join(cand_lb, cand_ub, occ_inst, occ_pos, L):
     return g_lb, g_ub
 
 
+def _gather_join_flat(cand_lb, cand_ub, occ, L):
+    """`_gather_join` for packed-axis candidates: `occ` ``[V, D]`` already
+    holds flat indices into the ``[L, M]`` candidate arrays (built as
+    ptr[occ_inst] + occ_pos — the CSR row-contiguity invariant)."""
+    V, D = occ.shape
+    idx = occ.reshape(-1)
+    g_ub = jnp.take(cand_ub, idx, axis=1).reshape(L, V, D).min(-1)
+    g_lb = jnp.take(cand_lb, idx, axis=1).reshape(L, V, D).max(-1)
+    return g_lb, g_ub
+
+
 def sweep_tile(lb, ub, vidx, coef, rhs, bidx, occ_prop, occ_slot,
                ad_vars, ad_offs, ad_mask, ad_occ_inst, ad_occ_pos,
+               ad_ptr, ad_pk_var, ad_pk_off, ad_pk_seg,
                cu_svar, cu_dur, cu_dem, cu_cap, cu_occ_inst, cu_occ_pos,
+               cu_ptr, cu_pk_svar, cu_pk_dur, cu_pk_dem, cu_pk_seg,
                box_lo, box_hi, *, horizon: int, n_alldiff: int = 0,
-               n_cumulative: int = 0) -> Tuple[jax.Array, jax.Array]:
+               n_cumulative: int = 0, ad_layout: str = "dense",
+               cu_layout: str = "dense") -> Tuple[jax.Array, jax.Array]:
     """One eventless sweep over a ``[L, V]`` tile of stores (gather form),
     dispatching over the typed propagator banks (DESIGN.md §12).
 
@@ -265,22 +473,40 @@ def sweep_tile(lb, ub, vidx, coef, rhs, bidx, occ_prop, occ_slot,
     its per-bank occurrence lists, and the joins compose by min/max —
     associativity/commutativity of ⊔ makes the kind order irrelevant to
     the result.  ``n_alldiff``/``n_cumulative`` are compile-time statics
-    so models without a bank skip its (dummy-only) work entirely.
+    so models without a bank skip its (dummy-only) work entirely;
+    ``ad_layout``/``cu_layout`` pick the dense or the packed/segmented
+    tile per bank (compile-time crossover, DESIGN.md §16) — same
+    semantics, different scratch scaling.
     """
     L = lb.shape[0]
     cand_lb, cand_ub = candidates_tile(lb, ub, vidx, coef, rhs, bidx)
     # fold the reif-entailment slot in: occ_slot ∈ [0, K] indexes [K+1]
     g_lb, g_ub = _gather_join(cand_lb, cand_ub, occ_prop, occ_slot, L)
     if n_alldiff:
-        ad_lb, ad_ub = alldiff_candidates_tile(lb, ub, ad_vars, ad_offs,
-                                               ad_mask)
-        j_lb, j_ub = _gather_join(ad_lb, ad_ub, ad_occ_inst, ad_occ_pos, L)
+        if ad_layout == "sparse":
+            ad_lb, ad_ub = alldiff_candidates_sparse_tile(
+                lb, ub, ad_pk_var, ad_pk_off, ad_pk_seg, n_alldiff)
+            occ = jnp.take(ad_ptr, ad_occ_inst) + ad_occ_pos   # flat [V, Dad]
+            j_lb, j_ub = _gather_join_flat(ad_lb, ad_ub, occ, L)
+        else:
+            ad_lb, ad_ub = alldiff_candidates_tile(lb, ub, ad_vars, ad_offs,
+                                                   ad_mask)
+            j_lb, j_ub = _gather_join(ad_lb, ad_ub, ad_occ_inst, ad_occ_pos,
+                                      L)
         g_lb = jnp.maximum(g_lb, j_lb)
         g_ub = jnp.minimum(g_ub, j_ub)
     if n_cumulative:
-        cu_lb, cu_ub = cumulative_candidates_tile(
-            lb, ub, cu_svar, cu_dur, cu_dem, cu_cap, horizon)
-        j_lb, j_ub = _gather_join(cu_lb, cu_ub, cu_occ_inst, cu_occ_pos, L)
+        if cu_layout == "sparse":
+            cu_lb, cu_ub = cumulative_candidates_sparse_tile(
+                lb, ub, cu_pk_svar, cu_pk_dur, cu_pk_dem, cu_pk_seg,
+                cu_cap, n_cumulative)
+            occ = jnp.take(cu_ptr, cu_occ_inst) + cu_occ_pos   # flat [V, Dcu]
+            j_lb, j_ub = _gather_join_flat(cu_lb, cu_ub, occ, L)
+        else:
+            cu_lb, cu_ub = cumulative_candidates_tile(
+                lb, ub, cu_svar, cu_dur, cu_dem, cu_cap, horizon)
+            j_lb, j_ub = _gather_join(cu_lb, cu_ub, cu_occ_inst, cu_occ_pos,
+                                      L)
         g_lb = jnp.maximum(g_lb, j_lb)
         g_ub = jnp.minimum(g_ub, j_ub)
     # clamp candidates into the initial box (overflow guard; sound because
@@ -295,14 +521,18 @@ def model_tables(cm: CompiledModel) -> Tuple:
     place the (backend-shared) sweep signature is spelled out."""
     return (cm.vidx, cm.coef, cm.rhs, cm.bidx, cm.occ_prop, cm.occ_slot,
             cm.ad_vars, cm.ad_offs, cm.ad_mask, cm.ad_occ_inst,
-            cm.ad_occ_pos, cm.cu_svar, cm.cu_dur, cm.cu_dem, cm.cu_cap,
-            cm.cu_occ_inst, cm.cu_occ_pos, cm.box_lo, cm.box_hi)
+            cm.ad_occ_pos, cm.ad_ptr, cm.ad_pk_var, cm.ad_pk_off,
+            cm.ad_pk_seg, cm.cu_svar, cm.cu_dur, cm.cu_dem, cm.cu_cap,
+            cm.cu_occ_inst, cm.cu_occ_pos, cm.cu_ptr, cm.cu_pk_svar,
+            cm.cu_pk_dur, cm.cu_pk_dem, cm.cu_pk_seg,
+            cm.box_lo, cm.box_hi)
 
 
 def model_statics(cm: CompiledModel) -> dict:
-    """The static (kind-dispatch) kwargs of `sweep_tile`."""
+    """The static (kind/layout-dispatch) kwargs of `sweep_tile`."""
     return dict(horizon=cm.horizon, n_alldiff=cm.n_alldiff,
-                n_cumulative=cm.n_cumulative)
+                n_cumulative=cm.n_cumulative,
+                ad_layout=cm.ad_layout, cu_layout=cm.cu_layout)
 
 
 def propagator_candidates(cm: CompiledModel, lb: jax.Array, ub: jax.Array
@@ -363,18 +593,30 @@ def sweep_scatter(cm: CompiledModel, lb: jax.Array, ub: jax.Array
     new_ub = ub.at[flat_v].min(jnp.maximum(cand_ub.reshape(-1), cm.box_lo[flat_v]))
     new_lb = lb.at[flat_v].max(jnp.minimum(cand_lb.reshape(-1), cm.box_hi[flat_v]))
     if cm.n_alldiff:
-        ad_lb, ad_ub = alldiff_candidates_tile(
-            lb[None], ub[None], cm.ad_vars, cm.ad_offs, cm.ad_mask)
-        v = cm.ad_vars.reshape(-1)
+        if cm.ad_layout == "sparse":
+            ad_lb, ad_ub = alldiff_candidates_sparse_tile(
+                lb[None], ub[None], cm.ad_pk_var, cm.ad_pk_off,
+                cm.ad_pk_seg, cm.n_alldiff)
+            v = cm.ad_pk_var
+        else:
+            ad_lb, ad_ub = alldiff_candidates_tile(
+                lb[None], ub[None], cm.ad_vars, cm.ad_offs, cm.ad_mask)
+            v = cm.ad_vars.reshape(-1)
         new_ub = new_ub.at[v].min(
             jnp.maximum(ad_ub[0].reshape(-1), cm.box_lo[v]))
         new_lb = new_lb.at[v].max(
             jnp.minimum(ad_lb[0].reshape(-1), cm.box_hi[v]))
     if cm.n_cumulative:
-        cu_lb, cu_ub = cumulative_candidates_tile(
-            lb[None], ub[None], cm.cu_svar, cm.cu_dur, cm.cu_dem,
-            cm.cu_cap, cm.horizon)
-        v = cm.cu_svar.reshape(-1)
+        if cm.cu_layout == "sparse":
+            cu_lb, cu_ub = cumulative_candidates_sparse_tile(
+                lb[None], ub[None], cm.cu_pk_svar, cm.cu_pk_dur,
+                cm.cu_pk_dem, cm.cu_pk_seg, cm.cu_cap, cm.n_cumulative)
+            v = cm.cu_pk_svar
+        else:
+            cu_lb, cu_ub = cumulative_candidates_tile(
+                lb[None], ub[None], cm.cu_svar, cm.cu_dur, cm.cu_dem,
+                cm.cu_cap, cm.horizon)
+            v = cm.cu_svar.reshape(-1)
         new_ub = new_ub.at[v].min(
             jnp.maximum(cu_ub[0].reshape(-1), cm.box_lo[v]))
         new_lb = new_lb.at[v].max(
@@ -427,7 +669,9 @@ def fixpoint(cm: CompiledModel, lb: jax.Array, ub: jax.Array,
 
 
 def fixpoint_tile(lb, ub, *tables, horizon: int, n_alldiff: int = 0,
-                  n_cumulative: int = 0, max_iters: Optional[int] = None,
+                  n_cumulative: int = 0, ad_layout: str = "dense",
+                  cu_layout: str = "dense",
+                  max_iters: Optional[int] = None,
                   stop_on_fail: bool = True, step=None):
     """Per-lane-masked fixpoint loop over a ``[L, V]`` tile (gather form).
 
@@ -449,7 +693,8 @@ def fixpoint_tile(lb, ub, *tables, horizon: int, n_alldiff: int = 0,
         def step(lb_, ub_):
             return sweep_tile(lb_, ub_, *tables, horizon=horizon,
                               n_alldiff=n_alldiff,
-                              n_cumulative=n_cumulative)
+                              n_cumulative=n_cumulative,
+                              ad_layout=ad_layout, cu_layout=cu_layout)
 
     def lane_live(lb_, ub_, changed, it):
         ok = changed

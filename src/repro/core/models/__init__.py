@@ -30,15 +30,21 @@ ZOO = {
 }
 
 
-# per-model generate() kwargs for the two instance tiers:
-# smoke (seconds-to-optimum on every backend) and bench (heavier)
+# per-model generate() kwargs for the three instance tiers:
+# smoke (seconds-to-optimum on every backend), bench (heavier), and
+# large (industrial sizes exercising the sparse bank layouts,
+# DESIGN.md §16 — compiled/bench-inspected everywhere; solved to proven
+# optimum only where the `large`-marked tests say so)
 _TIERS = {
     "rcpsp": (dict(n_tasks=5, n_resources=2, edge_prob=0.3),
-              dict(n_tasks=8, n_resources=3, edge_prob=0.25)),
-    "nqueens": (dict(n=5), dict(n=7)),
-    "coloring": (dict(n=6, edge_prob=0.5), dict(n=9, edge_prob=0.45)),
-    "knapsack": (dict(n=6), dict(n=10)),
-    "jobshop": (dict(n_jobs=2, n_machines=2), dict(n_jobs=3, n_machines=2)),
+              dict(n_tasks=8, n_resources=3, edge_prob=0.25),
+              dict(n_tasks=96, n_resources=4, edge_prob=0.06)),
+    "nqueens": (dict(n=5), dict(n=7), dict(n=256)),
+    "coloring": (dict(n=6, edge_prob=0.5), dict(n=9, edge_prob=0.45),
+                 dict(n=64, edge_prob=0.12)),
+    "knapsack": (dict(n=6), dict(n=10), dict(n=512)),
+    "jobshop": (dict(n_jobs=2, n_machines=2), dict(n_jobs=3, n_machines=2),
+                dict(n_jobs=20, n_machines=15)),
 }
 assert set(_TIERS) == set(ZOO)
 
@@ -61,6 +67,14 @@ def small_instance(name: str, seed: int = 0):
 def bench_instance(name: str, seed: int = 0):
     """Larger seeded instance per model (the benchmark tier)."""
     return _instance(name, 1, seed)
+
+
+def large_instance(name: str, seed: int = 0):
+    """Industrial-size seeded instance per model (the scale tier,
+    DESIGN.md §16): 10²–10³ variables, compiled onto the sparse bank
+    layouts by the auto crossover.  Used by the `scale` bench section
+    and the `large`-marked tests (`REPRO_RUN_LARGE=1`)."""
+    return _instance(name, 2, seed)
 
 
 def ground_check(mod, inst, handles, res):

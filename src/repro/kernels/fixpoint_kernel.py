@@ -52,6 +52,10 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from repro.core.compile import (alldiff_dense_tile_bytes,
+                                alldiff_sparse_tile_bytes,
+                                cumulative_dense_tile_bytes,
+                                cumulative_sparse_tile_bytes)
 from repro.core.fixpoint import fixpoint_tile
 from repro.core import search as S
 
@@ -60,7 +64,7 @@ from repro.core import search as S
 # sweep intermediates explicitly instead of reserving a blanket margin.
 VMEM_LIMIT_BYTES = 16 * 1024 * 1024
 
-N_TABLES = 19        # positional args of fixpoint.sweep_tile, in order
+N_TABLES = 28        # positional args of fixpoint.sweep_tile, in order
 N_STATE = len(S.LaneState._fields)                                # 19
 _BOOL_FIELDS = ("dec_flip", "fresh", "done", "incomplete", "has_sol")
 
@@ -82,9 +86,12 @@ def vmem_budget(cm, lane_tile: int, *, resident: bool = False,
       stores (decision path [TL, MD]·3, best_sol [TL, V], per-lane
       scalars), in + out, plus the broadcast EPS pool [S, V]·2;
     * ``scratch`` — the dominant sweep intermediates per lane: the
-      [P1, K+1] linear candidate tensors, the [A1, N³] Hall-interval
-      tensors and the [C1, T, H] time-table profile (conservative
-      coefficient per bank), plus the [V, D] occurrence gathers.
+      [P1, K+1] linear candidate tensors, the per-bank tile scratch
+      **for the compiled layout** (dense: [A1, N³] Hall tensor /
+      [C1, T, H] time-table grid; sparse: the [M, M] packed pairwise
+      tensors / the O(M) event arrays — estimators shared with
+      `compile.py`'s crossover guard), plus the [V, D] occurrence
+      gathers.
 
     `fixpoint_pallas`/`search_pallas` compare ``total`` against
     `VMEM_LIMIT_BYTES` and halve the lane tile instead of handing Mosaic
@@ -102,11 +109,18 @@ def vmem_budget(cm, lane_tile: int, *, resident: bool = False,
     C1, T = cm.cu_svar.shape
     Dcu = cm.cu_occ_inst.shape[1]
     per_lane = 8 * P1 * (K + 1) + 2 * V * (D + Dad + Dcu)
-    if cm.n_alldiff:
-        per_lane += 3 * A1 * N ** 3
-    if cm.n_cumulative:
-        per_lane += 4 * C1 * T * cm.horizon
     scratch = lane_tile * per_lane * it
+    if cm.n_alldiff:
+        scratch += lane_tile * (
+            alldiff_sparse_tile_bytes(cm.ad_packed, it)
+            if cm.ad_layout == "sparse"
+            else alldiff_dense_tile_bytes(cm.n_alldiff, N, it))
+    if cm.n_cumulative:
+        scratch += lane_tile * (
+            cumulative_sparse_tile_bytes(cm.cu_packed, it)
+            if cm.cu_layout == "sparse"
+            else cumulative_dense_tile_bytes(cm.n_cumulative, T,
+                                             cm.horizon, it))
 
     stores = 4 * lane_tile * V * it          # lb/ub in + out
     state = 0
@@ -163,7 +177,7 @@ def fit_lane_tile(cm, lane_tile: int, n_lanes: int, *,
 # --------------------------------------------------------------------------
 
 def _fixpoint_kernel(*refs, max_sweeps: int, horizon: int, n_alldiff: int,
-                     n_cumulative: int):
+                     n_cumulative: int, ad_layout: str, cu_layout: str):
     table_refs = refs[:N_TABLES]
     lb_ref, ub_ref = refs[N_TABLES], refs[N_TABLES + 1]
     out_lb_ref, out_ub_ref, sweeps_ref, conv_ref = refs[N_TABLES + 2:]
@@ -171,6 +185,7 @@ def _fixpoint_kernel(*refs, max_sweeps: int, horizon: int, n_alldiff: int,
     lb, ub, sweeps, conv = fixpoint_tile(
         lb_ref[...], ub_ref[...], *tables, horizon=horizon,
         n_alldiff=n_alldiff, n_cumulative=n_cumulative,
+        ad_layout=ad_layout, cu_layout=cu_layout,
         max_iters=max_sweeps)
     out_lb_ref[...] = lb
     out_ub_ref[...] = ub
@@ -188,13 +203,16 @@ def _table_specs(cm):
     C1, T = cm.cu_svar.shape
     Dcu = cm.cu_occ_inst.shape[1]
     V = cm.n_vars
+    Mad, Mcu = cm.ad_packed, cm.cu_packed
     return [
         whole(P1, K), whole(P1, K), whole(P1), whole(P1),
         whole(V, D), whole(V, D),
         whole(A1, N), whole(A1, N), whole(A1, N),
         whole(V, Dad), whole(V, Dad),
+        whole(A1 + 1), whole(Mad), whole(Mad), whole(Mad),
         whole(C1, T), whole(C1, T), whole(C1, T), whole(C1),
         whole(V, Dcu), whole(V, Dcu),
+        whole(C1 + 1), whole(Mcu), whole(Mcu), whole(Mcu), whole(Mcu),
         whole(V), whole(V),
     ]
 
@@ -227,7 +245,8 @@ def fixpoint_pallas(cm, lb, ub, *, lane_tile: int = 8,
     out_lb, out_ub, sweeps, conv = pl.pallas_call(
         functools.partial(_fixpoint_kernel, max_sweeps=max_sweeps,
                           horizon=cm.horizon, n_alldiff=cm.n_alldiff,
-                          n_cumulative=cm.n_cumulative),
+                          n_cumulative=cm.n_cumulative,
+                          ad_layout=cm.ad_layout, cu_layout=cm.cu_layout),
         grid=grid,
         in_specs=_table_specs(cm) + [tiled, tiled],
         out_specs=[tiled, tiled, lane1d, lane1d],
@@ -261,7 +280,8 @@ def _unpack_state(arrays) -> S.LaneState:
 
 
 def _search_kernel(*refs, supersteps: int, max_sweeps: int, horizon: int,
-                   n_alldiff: int, n_cumulative: int, obj_var: int,
+                   n_alldiff: int, n_cumulative: int, ad_layout: str,
+                   cu_layout: str, obj_var: int,
                    var_strategy: str, val_strategy: str,
                    stop_on_first: bool, max_fixpoint_iters, n_tiles: int):
     """K fused supersteps over one VMEM-resident lane tile.
@@ -311,6 +331,7 @@ def _search_kernel(*refs, supersteps: int, max_sweeps: int, horizon: int,
             lb, ub, sweeps, conv = fixpoint_tile(
                 pre.lb, pre.ub, *tables, horizon=horizon,
                 n_alldiff=n_alldiff, n_cumulative=n_cumulative,
+                ad_layout=ad_layout, cu_layout=cu_layout,
                 max_iters=cap)
             st = S.lane_commit_tile(st, pre, lb, ub, sweeps, conv, bv,
                                     obj_var=obj_var,
@@ -420,7 +441,8 @@ def search_pallas(cm, subs_lb, subs_ub, st: S.LaneState, gbest, it,
         functools.partial(
             _search_kernel, supersteps=supersteps, max_sweeps=max_sweeps,
             horizon=cm.horizon, n_alldiff=cm.n_alldiff,
-            n_cumulative=cm.n_cumulative, obj_var=cm.obj_var,
+            n_cumulative=cm.n_cumulative, ad_layout=cm.ad_layout,
+            cu_layout=cm.cu_layout, obj_var=cm.obj_var,
             var_strategy=var_strategy, val_strategy=val_strategy,
             stop_on_first=stop_on_first,
             max_fixpoint_iters=max_fixpoint_iters, n_tiles=n_tiles),
