@@ -595,6 +595,102 @@ def run_scale_smoke(rows: List[str], timeout_s: float = 120.0,
     return records
 
 
+def run_ct_smoke(rows: List[str], timeout_s: float = 120.0, seed: int = 0):
+    """Compact-Table smoke records (DESIGN.md §17) for the bench
+    `compact_table` section.
+
+    Per extensional zoo model (crossword, configuration):
+
+    * root-fixpoint **props/s** with the bitset store carried (the
+      native CT path) plus the per-bank statics — currtable words
+      (`ct_words`), bitset words per variable (`n_words`);
+    * a proven solve on EVERY backend; **hard-fails** on any
+      status/objective mismatch or ground-check failure (the §17
+      determinism gate);
+    * the same instance under ``decompose=True`` (the reified
+      disjunction oracle) — **hard-fails** on status/objective
+      mismatch vs native; the wall-clock ratio is the
+      `native_speedup` headline.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import bitset as B
+    from repro.core import fixpoint as F
+
+    records = []
+    for name in ("crossword", "configuration"):
+        mod = zoo.ZOO[name]
+        inst = zoo.small_instance(name, seed=seed)
+        mn, h = mod.build_model(inst)
+        md, _ = mod.build_model(inst, decompose=True)
+        cmn, cmd = mn.compile(), md.compile()
+
+        # ---- root-fixpoint propagation throughput (bitset carried) ----
+        L = 8
+        lb = jnp.broadcast_to(cmn.lb0[None], (L, cmn.n_vars))
+        ub = jnp.broadcast_to(cmn.ub0[None], (L, cmn.n_vars))
+        dom = B.from_bounds(lb, ub, jnp.asarray(cmn.dom_off), cmn.n_words,
+                            track=jnp.asarray(cmn.dom_track))
+        F.fixpoint_batch(cmn, lb, ub, dom, max_iters=2)[0] \
+            .block_until_ready()
+        t0 = time.time()
+        sweeps = int(np.asarray(
+            F.fixpoint_batch(cmn, lb, ub, dom, max_iters=8)[3]).sum())
+        wall = max(time.time() - t0, 1e-9)
+        props_per_sec = cmn.total_props * sweeps / wall
+
+        # ---- every backend proves the same optimum (hard gate) --------
+        native = {}
+        for be in available_backends():
+            cfg = solver.SolveConfig.preset(
+                "prove", backend=be, n_lanes=8, eps_target=16,
+                timeout_s=timeout_s)
+            res = solver.Solver(cfg).solve(cmn)
+            checked = zoo.ground_check(mod, inst, h, res)
+            native[be] = dict(status=res.status, objective=res.objective,
+                              wall_s=res.wall_s, ground_check=checked)
+            rows.append(f"compact_table,{name},{be},{res.status},"
+                        f"{res.objective},{res.wall_s:.3f},{checked}")
+            if res.status != solver.OPTIMAL or checked is not True:
+                raise SystemExit(
+                    f"compact_table: {name} on {be} not proven+checked: "
+                    f"{res.status} gc={checked}")
+        if len({(r['status'], r['objective'])
+                for r in native.values()}) != 1:
+            raise SystemExit(
+                f"compact_table: backend status/objective mismatch on "
+                f"{name}: {native}")
+
+        # ---- native CT vs the reified-disjunction oracle --------------
+        cfg = solver.SolveConfig.preset(
+            "prove", n_lanes=8, eps_target=16, timeout_s=timeout_s)
+        rd = solver.Solver(cfg).solve(cmd)
+        ref = native["gather"]
+        if (rd.status, rd.objective) != (ref["status"], ref["objective"]):
+            raise SystemExit(
+                f"compact_table: native vs decomposed mismatch on {name}: "
+                f"native={ref['status']}/{ref['objective']} "
+                f"decomposed={rd.status}/{rd.objective}")
+        speedup = rd.wall_s / max(ref["wall_s"], 1e-9)
+        rows.append(
+            f"compact_table,{name},tables={cmn.n_table},"
+            f"arity={cmn.ct_arity},currtable_words={cmn.ct_words},"
+            f"bitset_words={cmn.n_words},props/s={props_per_sec:.0f},"
+            f"native_speedup={speedup:.1f}x")
+        records.append(dict(
+            model=name, instance=inst.name,
+            n_table=cmn.n_table, ct_arity=cmn.ct_arity,
+            currtable_words=cmn.ct_words, bitset_words=cmn.n_words,
+            props_native=cmn.total_props, props_decomposed=cmd.total_props,
+            root_fixpoint_sweeps=sweeps, props_per_sec=props_per_sec,
+            native=native,
+            decomposed=dict(status=rd.status, objective=rd.objective,
+                            wall_s=rd.wall_s),
+            native_speedup=speedup))
+    return records
+
+
 def merge_json(path: str, section: str, records) -> None:
     """Merge `records` into `path` under `section`, preserving whatever
     the propagation smoke already wrote there."""
@@ -670,6 +766,15 @@ def main(argv=None):
                          "mismatch), and large-tier props/s + nodes/s "
                          "probes; records go to the bench JSON `scale` "
                          "section")
+    ap.add_argument("--ct-smoke", action="store_true",
+                    help="ONLY the Compact-Table benchmark (DESIGN.md "
+                         "§17): bitset-carried root-fixpoint props/s + "
+                         "currtable/bitset word statics on the "
+                         "extensional zoo models, every backend proven "
+                         "and ground-checked (hard-fails on any "
+                         "status/objective mismatch), native vs "
+                         "decompose=True oracle speedup; records go to "
+                         "the bench JSON `compact_table` section")
     ap.add_argument("--eps-target", type=int, default=64,
                     help="EPS pool size for the zoo runs (DESIGN.md §9)")
     ap.add_argument("--json", default=None,
@@ -680,14 +785,25 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.json and not (args.zoo or args.zoo_smoke or args.throughput
                           or args.superstep_bench or args.dist_bench
-                          or args.serve_bench or args.scale_smoke):
+                          or args.serve_bench or args.scale_smoke
+                          or args.ct_smoke):
         ap.error("--json records the zoo/api/superstep/distributed/"
-                 "serving/scale sections; pass --zoo, --zoo-smoke, "
-                 "--throughput, --superstep-bench, --dist-bench, "
-                 "--serve-bench or --scale-smoke")
+                 "serving/scale/compact_table sections; pass --zoo, "
+                 "--zoo-smoke, --throughput, --superstep-bench, "
+                 "--dist-bench, --serve-bench, --scale-smoke or "
+                 "--ct-smoke")
     timeout = args.timeout or (300 if args.full else 30)
 
     rows = []
+    if args.ct_smoke:
+        rows.append("compact_table,model,backend,status,objective,time_s,"
+                    "ground_check (+ per-model statics/speedup line)")
+        records = run_ct_smoke(rows, timeout_s=timeout if args.timeout
+                               else 120.0)
+        print("\n".join(rows))
+        if args.json:
+            merge_json(args.json, "compact_table", records)
+        return rows
     if args.scale_smoke:
         rows.append("scale,kind,model,per-kind columns "
                     "(bank_bytes|parity|large)")

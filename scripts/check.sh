@@ -7,7 +7,7 @@
 # the seed-era "43 known-failing NN tests" carve-out is gone since the
 # JAX compat shim, repro/compat.py), a 2-size bench_propagation smoke
 # comparing all registered propagation backends, a model-zoo solver smoke
-# (all five models through the EPS engine, DESIGN.md §10, with per-model
+# (every zoo model through the EPS engine, DESIGN.md §10, with per-model
 # typed-propagator-table sizes, §12), a session-API smoke (cold+warm
 # compile amortization + solve_many batched throughput on 4 knapsack
 # instances, DESIGN.md §11), a resident-megakernel smoke (one
@@ -20,10 +20,14 @@
 # (fixed-seed open-loop Poisson load through the continuous-batching
 # scheduler, DESIGN.md §15), the scale-tier bench (sparse-vs-dense peak
 # bank-tile bytes, forced dense/sparse objective parity, large-tier
-# props/s + nodes/s probes, DESIGN.md §16) and the docs check, writing
+# props/s + nodes/s probes, DESIGN.md §16), the Compact-Table bench
+# (bitset-carried props/s + currtable word statics on the extensional
+# zoo models, every backend proven + ground-checked, native vs
+# decompose=True oracle — hard-fails on any status/objective mismatch,
+# DESIGN.md §17) and the docs check, writing
 # BENCH_propagation_smoke.json (propagation rows + `solver` + `api` +
-# `superstep` + `distributed` + `serving` + `scale` sections) at the
-# repo root so the perf trajectory populates per PR.  The zoo smoke
+# `superstep` + `distributed` + `serving` + `scale` + `compact_table`
+# sections) at the repo root so the perf trajectory populates per PR.  The zoo smoke
 # sweeps EVERY registered backend, pallas_resident included, and
 # hard-fails on any proven-optimum mismatch between backends; the dist
 # bench hard-fails on any mesh losing status/objective parity with
@@ -68,7 +72,7 @@ python -m repro.launch.solve --n 8 --lanes 8 --subs 16 \
     --backend pallas_resident --supersteps-per-launch 16 || exit 1
 
 echo
-echo "== model-zoo solver smoke (5 models, EPS engine, ALL backends) =="
+echo "== model-zoo solver smoke (all zoo models, EPS engine, ALL backends) =="
 python -m benchmarks.bench_solver \
     --zoo-smoke --json BENCH_propagation_smoke.json || exit 1
 
@@ -97,6 +101,11 @@ echo
 echo "== scale bench (sparse banks: bytes, parity, large-tier probes, §16) =="
 python -m benchmarks.bench_solver \
     --scale-smoke --json BENCH_propagation_smoke.json || exit 1
+
+echo
+echo "== compact-table bench (bitset CT: props/s, parity, oracle, §17) =="
+python -m benchmarks.bench_solver \
+    --ct-smoke --json BENCH_propagation_smoke.json || exit 1
 
 echo
 echo "== docs check (README/DESIGN references + quickstart dry-run) =="

@@ -124,7 +124,7 @@ class Progress:
 # --------------------------------------------------------------------------
 
 _VAR_STRATEGIES = (S.INPUT_ORDER, S.MIN_DOM, S.MIN_LB)
-_VAL_STRATEGIES = (S.VAL_MIN, S.VAL_SPLIT)
+_VAL_STRATEGIES = (S.VAL_MIN, S.VAL_SPLIT, S.VAL_MIDDLE_OUT)
 
 # named flag recipes (DESIGN.md §11). `prove` is the proof profile used
 # by every benchmark table; `fast` is the §Perf P0/H1 capped-sweep
@@ -313,6 +313,10 @@ def shape_signature(cm: CompiledModel) -> tuple:
             cm.n_alldiff, cm.ad_width, cm.ad_docc,
             cm.n_cumulative, cm.cu_width, cm.cu_docc, cm.horizon,
             cm.ad_layout, cm.ad_packed, cm.cu_layout, cm.cu_packed,
+            # §17 extensional bank layout + bitset word count: mixed
+            # table/bounds models (and different table geometries) must
+            # never collide in the compiled-runner cache
+            cm.n_table, cm.ct_arity, cm.ct_words, cm.ct_docc, cm.n_words,
             int(cm.branch_vars.shape[0]), cm.obj_var, cm.dtype)
 
 

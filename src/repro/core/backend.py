@@ -66,8 +66,10 @@ class PropagationBackend(Protocol):
         ...
 
     def fixpoint_batch(self, cm: CompiledModel, lb: jax.Array,
-                       ub: jax.Array, *,
+                       ub: jax.Array, *, dom: Optional[jax.Array] = None,
                        max_iters: Optional[int] = None) -> FixpointResult:
+        # with `dom` (the bitset store, DESIGN.md §17) backends return
+        # (lb', ub', dom', sweeps, converged) instead of the 4-tuple
         ...
 
 
@@ -79,8 +81,8 @@ class GatherBackend:
     def fixpoint(self, cm, lb, ub, *, max_iters=None):
         return F.fixpoint(cm, lb, ub, max_iters=max_iters)
 
-    def fixpoint_batch(self, cm, lb, ub, *, max_iters=None):
-        return F.fixpoint_batch(cm, lb, ub, max_iters=max_iters)
+    def fixpoint_batch(self, cm, lb, ub, *, dom=None, max_iters=None):
+        return F.fixpoint_batch(cm, lb, ub, dom, max_iters=max_iters)
 
 
 class ScatterBackend:
@@ -91,15 +93,15 @@ class ScatterBackend:
     def fixpoint(self, cm, lb, ub, *, max_iters=None):
         return F.fixpoint(cm, lb, ub, max_iters=max_iters, use_scatter=True)
 
-    def fixpoint_batch(self, cm, lb, ub, *, max_iters=None):
-        return F.fixpoint_batch(cm, lb, ub, max_iters=max_iters,
+    def fixpoint_batch(self, cm, lb, ub, *, dom=None, max_iters=None):
+        return F.fixpoint_batch(cm, lb, ub, dom, max_iters=max_iters,
                                 use_scatter=True)
 
 
 @partial(jax.jit, static_argnames=("lane_tile", "max_sweeps", "interpret"))
-def _pallas_batch(cm, lb, ub, lane_tile, max_sweeps, interpret):
+def _pallas_batch(cm, lb, ub, dom, lane_tile, max_sweeps, interpret):
     from repro.kernels.fixpoint_kernel import fixpoint_pallas
-    return fixpoint_pallas(cm, lb, ub, lane_tile=lane_tile,
+    return fixpoint_pallas(cm, lb, ub, dom=dom, lane_tile=lane_tile,
                            max_sweeps=max_sweeps, interpret=interpret)
 
 
@@ -135,11 +137,11 @@ class PallasBackend:
             cm, lb[None], ub[None], max_iters=max_iters)
         return nlb[0], nub[0], sweeps[0], conv[0]
 
-    def fixpoint_batch(self, cm, lb, ub, *, max_iters=None):
+    def fixpoint_batch(self, cm, lb, ub, *, dom=None, max_iters=None):
         cap = self.max_sweeps if max_iters is None else int(max_iters)
         tile = max(1, min(self.lane_tile, lb.shape[0]))
-        return _pallas_batch(cm, lb, ub, lane_tile=tile, max_sweeps=cap,
-                             interpret=self.interpret)
+        return _pallas_batch(cm, lb, ub, dom, lane_tile=tile,
+                             max_sweeps=cap, interpret=self.interpret)
 
 
 class PallasResidentBackend(PallasBackend):

@@ -10,9 +10,10 @@ backtracking on copied stores, and branch & bound.
 It shares the Model/CompiledModel representation and uses the *same*
 propagator math (one numpy transcription per propagator kind of the
 `fixpoint` tile semantics — ReifLinLe rows, AllDifferent Hall-interval
-bounds consistency, Cumulative time-table filtering; DESIGN.md §12), so
-objective values must agree exactly with the parallel engine — that
-agreement is itself a correctness test of both.
+bounds consistency, Cumulative time-table filtering, Compact-Table
+extensional rows on bitset domains; DESIGN.md §12, §17), so objective
+values must agree exactly with the parallel engine — that agreement is
+itself a correctness test of both.
 """
 
 from __future__ import annotations
@@ -23,6 +24,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import bitset as B
 from repro.core.compile import CompiledModel
 from repro.core import search as S
 from repro.core.engine import OPTIMAL, SAT, UNSAT, UNKNOWN, SolveResult
@@ -173,12 +175,65 @@ def _cumulative_update(lb, ub, svars, durs, dems, cap, horizon,
     return changed
 
 
+def _ct_update(lb, ub, dom, vs, supp, dom_off, n_words,
+               box_lo, box_hi) -> List[int]:
+    """Reset-based Compact-Table filtering for one extensional row —
+    numpy transcription of `fixpoint.ct_candidates_tile` (DESIGN.md §17).
+
+    `supp` is the de-padded support bank ``[R, K32, TW]``: bit j of word
+    ``supp[r, k, j // 32]`` is set iff tuple j takes value
+    ``dom_off[vs[r]] + k`` at position r.  All member vars are
+    dom-tracked by construction (n_words covers table∪branch widths).
+    """
+    R = len(vs)
+    K32 = B.WORD_BITS * n_words
+    off = dom_off[vs]
+    vbw = dom[vs] & B.np_from_bounds(lb[vs], ub[vs], off, n_words)
+    shifts = np.arange(B.WORD_BITS, dtype=np.uint32)
+    vb = ((vbw[:, :, None] >> shifts) & np.uint32(1)).reshape(R, K32)
+    # OR of supports over live member values; sum == OR because each
+    # tuple has exactly one value per position (disjoint bit columns)
+    supp_on = (vb[:, :, None] * supp).sum(axis=1).astype(np.uint32)
+    curr = np.bitwise_and.reduce(supp_on, axis=0)
+    changed: List[int] = []
+    if not curr.any():                       # currtable wiped: unsatisfiable
+        v0 = int(vs[0])
+        if lb[v0] < int(box_hi[v0]):         # box_hi = ub0+1 crosses ub
+            lb[v0] = int(box_hi[v0])
+            changed.append(v0)
+        return changed
+    surv = (supp & curr[None, None, :]).any(axis=2)           # [R, K32]
+    nw = ((surv.reshape(R, n_words, B.WORD_BITS).astype(np.uint32)
+           << shifts).sum(axis=2).astype(np.uint32))
+    for r in range(R):
+        v = int(vs[r])
+        ndw = dom[v] & nw[r]
+        if not np.array_equal(ndw, dom[v]):
+            dom[v] = ndw
+            changed.append(v)
+        lo, hi = B.np_to_bounds(ndw, dom_off[v])
+        nlb = min(int(lo), int(box_hi[v]))
+        if nlb > lb[v]:
+            lb[v] = nlb
+            changed.append(v)
+        nub = max(int(hi), int(box_lo[v]))
+        if nub < ub[v]:
+            ub[v] = nub
+            changed.append(v)
+    return changed
+
+
 class SequentialSolver:
     """Event-queue propagation + DFS + B&B on numpy stores.
 
     Propagator ids: ``[0, P)`` are the ReifLinLe rows, ``[P, P+A)`` the
-    AllDifferent rows, ``[P+A, P+A+C)`` the Cumulative rows — all in one
-    event queue with per-kind watch lists (DESIGN.md §12).
+    AllDifferent rows, ``[P+A, P+A+C)`` the Cumulative rows,
+    ``[P+A+C, P+A+C+T)`` the Compact-Table rows — all in one event
+    queue with per-kind watch lists (DESIGN.md §12, §17).
+
+    When the model has tables (or middle-out branching is selected) a
+    packed bitset store rides along the interval stores on the DFS
+    stack, exactly like the engine's optional `dom` carry.
     """
 
     def __init__(self, cm: CompiledModel, opts: Optional[S.SearchOptions] = None):
@@ -192,7 +247,12 @@ class SequentialSolver:
         self.box_hi = np.asarray(cm.box_hi)
         self.branch_vars = np.asarray(cm.branch_vars)
         P, A, C = cm.n_props, cm.n_alldiff, cm.n_cumulative
-        self.n_pids = P + A + C
+        T = cm.n_table
+        self.n_pids = P + A + C + T
+        self.dom_off = np.asarray(cm.dom_off)
+        self.dom_track = np.asarray(cm.dom_track)
+        self.n_words = cm.n_words
+        self.use_dom = T > 0 or self.opts.val_strategy == S.VAL_MIDDLE_OUT
         # native banks, de-padded to per-row member lists
         ad_mask = np.asarray(cm.ad_mask)
         self.ad_rows = []
@@ -206,6 +266,12 @@ class SequentialSolver:
                                  np.asarray(cm.cu_dur)[c],
                                  np.asarray(cm.cu_dem)[c],
                                  int(np.asarray(cm.cu_cap)[c])))
+        ct_mask = np.asarray(cm.ct_mask)
+        self.ct_rows = []
+        for t in range(T):
+            sel = ct_mask[t] != 0
+            self.ct_rows.append((np.asarray(cm.ct_vars)[t][sel],
+                                 np.asarray(cm.ct_supp)[t][sel]))
         # watchers: var -> pids that mention it (terms/reif bool/members)
         self.watch: List[List[int]] = [[] for _ in range(cm.n_vars)]
         for p in range(P):
@@ -224,22 +290,54 @@ class SequentialSolver:
                       if d_ > 0 and r_ > 0)
             for v in eff:
                 self.watch[v].append(P + A + c)
+        for t, (vs, _) in enumerate(self.ct_rows):
+            for v in set(int(x) for x in vs):
+                self.watch[v].append(P + A + C + t)
 
-    def _apply_pid(self, lb, ub, pid: int) -> List[int]:
-        P, A = self.cm.n_props, self.cm.n_alldiff
+    def _apply_pid(self, lb, ub, dom, pid: int) -> List[int]:
+        P, A, C = self.cm.n_props, self.cm.n_alldiff, self.cm.n_cumulative
         if pid < P:
             return _row_update(self.cm, lb, ub, pid, self.vidx, self.coef,
                                self.rhs, self.bidx, self.box_lo, self.box_hi)
         if pid < P + A:
             vs, offs = self.ad_rows[pid - P]
             return _alldiff_update(lb, ub, vs, offs, self.box_lo, self.box_hi)
-        vs, du, de, cap = self.cu_rows[pid - P - A]
-        return _cumulative_update(lb, ub, vs, du, de, cap, self.cm.horizon,
-                                  self.box_lo, self.box_hi)
+        if pid < P + A + C:
+            vs, du, de, cap = self.cu_rows[pid - P - A]
+            return _cumulative_update(lb, ub, vs, du, de, cap,
+                                      self.cm.horizon,
+                                      self.box_lo, self.box_hi)
+        vs, supp = self.ct_rows[pid - P - A - C]
+        return _ct_update(lb, ub, dom, vs, supp, self.dom_off, self.n_words,
+                          self.box_lo, self.box_hi)
 
-    def propagate(self, lb, ub, dirty: Optional[List[int]] = None) -> bool:
-        """Event loop to fixpoint. Returns False on failure."""
+    def _normalize(self, lb, ub, dom) -> List[int]:
+        """`fixpoint.dom_normalize_tile` transcription: clip the bitset
+        store to the interval hull and tighten tracked bounds back to
+        the bitset hull.  Returns vars whose bounds moved."""
+        dom &= B.np_from_bounds(lb, ub, self.dom_off, self.n_words,
+                                track=self.dom_track)
+        lo, hi = B.np_to_bounds(dom, self.dom_off)
+        trk = self.dom_track != 0
+        nlb = np.where(trk, np.maximum(lb, np.minimum(lo, self.box_hi)),
+                       lb).astype(lb.dtype)
+        nub = np.where(trk, np.minimum(ub, np.maximum(hi, self.box_lo)),
+                       ub).astype(ub.dtype)
+        ch = np.nonzero((nlb != lb) | (nub != ub))[0]
+        lb[:] = nlb
+        ub[:] = nub
+        return [int(v) for v in ch]
+
+    def propagate(self, lb, ub, dom=None, dirty: Optional[List[int]] = None) -> bool:
+        """Event loop to fixpoint (interleaved with dom↔bounds
+        normalization when a bitset store rides along).  Returns False
+        on failure.  A caller that passes no `dom` on a table model
+        gets the engine's transient-dom fallback: a bounds-derived
+        bitset per call (sound superset, weaker on holes)."""
         P = self.n_pids
+        if dom is None and self.cm.n_table > 0:
+            dom = B.np_from_bounds(lb, ub, self.dom_off, self.n_words,
+                                   track=self.dom_track)
         if dirty is None:
             queue = list(range(P))
             queued = [True] * P
@@ -252,21 +350,33 @@ class SequentialSolver:
                         queued[p] = True
                         queue.append(p)
         qi = 0
-        while qi < len(queue):
-            p = queue[qi]
-            qi += 1
-            queued[p] = False
-            changed = self._apply_pid(lb, ub, p)
-            for v in changed:
+        while True:
+            while qi < len(queue):
+                p = queue[qi]
+                qi += 1
+                queued[p] = False
+                changed = self._apply_pid(lb, ub, dom, p)
+                for v in changed:
+                    if lb[v] > ub[v]:
+                        return False
+                    for q in self.watch[v]:
+                        if not queued[q]:
+                            queued[q] = True
+                            queue.append(q)
+                if qi > 4096 * max(P, 1):    # safety valve
+                    raise RuntimeError("event loop runaway")
+            if dom is None:
+                return True
+            moved = self._normalize(lb, ub, dom)
+            if not moved:
+                return True
+            for v in moved:
                 if lb[v] > ub[v]:
                     return False
-                for q in self.watch[v]:
-                    if not queued[q]:
-                        queued[q] = True
-                        queue.append(q)
-            if qi > 4096 * max(P, 1):        # safety valve
-                raise RuntimeError("event loop runaway")
-        return True
+                for p in self.watch[v]:
+                    if not queued[p]:
+                        queued[p] = True
+                        queue.append(p)
 
     def solve(self, timeout_s: Optional[float] = None,
               node_budget: Optional[int] = None) -> SolveResult:
@@ -280,10 +390,13 @@ class SequentialSolver:
         n_nodes = n_fails = n_sols = 0
         complete = True
 
-        ok = self.propagate(lb, ub)
-        stack: List[Tuple[np.ndarray, np.ndarray]] = []
+        dom0 = (B.np_from_bounds(lb, ub, self.dom_off, self.n_words,
+                                 track=self.dom_track)
+                if self.use_dom else None)
+        ok = self.propagate(lb, ub, dom0)
+        stack: List[Tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]] = []
         if ok:
-            stack.append((lb, ub))
+            stack.append((lb, ub, dom0))
 
         while stack:
             if timeout_s is not None and time.time() - t0 > timeout_s:
@@ -292,12 +405,12 @@ class SequentialSolver:
             if node_budget is not None and n_nodes >= node_budget:
                 complete = False
                 break
-            lb, ub = stack.pop()
+            lb, ub, dom = stack.pop()
             # B&B bound tell (joined on pop => valid for the whole subtree)
             if cm.obj_var >= 0 and best_obj < big:
                 if ub[cm.obj_var] > best_obj - 1:
                     ub[cm.obj_var] = best_obj - 1
-                if not self.propagate(lb, ub, dirty=[cm.obj_var]):
+                if not self.propagate(lb, ub, dom, dirty=[cm.obj_var]):
                     n_nodes += 1
                     n_fails += 1
                     continue
@@ -323,17 +436,44 @@ class SequentialSolver:
             else:
                 pos = int(np.argmax(unfixed))
             v = int(self.branch_vars[pos])
+            mid_out = (opts.val_strategy == S.VAL_MIDDLE_OUT
+                       and dom is not None and self.dom_track[v] != 0)
+            if mid_out:
+                # pick the live value closest to the interval midpoint
+                # (ties to the lower value), branch x = m  |  x ≠ m
+                off_v = int(self.dom_off[v])
+                vbw = dom[v] & B.np_from_bounds(lb[v], ub[v], off_v,
+                                                self.n_words)
+                shifts = np.arange(B.WORD_BITS, dtype=np.uint32)
+                bits = ((vbw[:, None] >> shifts) & np.uint32(1)).reshape(-1)
+                vals = off_v + np.nonzero(bits)[0].astype(np.int64)
+                mid = (int(lb[v]) + int(ub[v])) // 2
+                score = 2 * np.abs(vals - mid) + (vals > mid)
+                mval = int(vals[int(np.argmin(score))])
+                rl, ru = lb.copy(), ub.copy()
+                rd = dom.copy()
+                rd[v] = B.np_clear_value(dom[v], mval, off_v)
+                if self.propagate(rl, ru, rd, dirty=[v]):
+                    stack.append((rl, ru, rd))
+                ll, lu, ld = lb, ub, dom      # reuse parent arrays for left
+                ll[v] = lu[v] = mval
+                if self.propagate(ll, lu, ld, dirty=[v]):
+                    stack.append((ll, lu, ld))
+                else:
+                    n_fails += 1
+                continue
             mval = int(lb[v]) if opts.val_strategy == S.VAL_MIN \
                 else int((lb[v] + ub[v]) // 2)
             # right child pushed first => left (x ≤ m) explored first
             rl, ru = lb.copy(), ub.copy()
+            rd = dom.copy() if dom is not None else None
             rl[v] = mval + 1
-            if rl[v] <= ru[v] and self.propagate(rl, ru, dirty=[v]):
-                stack.append((rl, ru))
-            ll, lu = lb, ub                   # reuse parent arrays for left
+            if rl[v] <= ru[v] and self.propagate(rl, ru, rd, dirty=[v]):
+                stack.append((rl, ru, rd))
+            ll, lu, ld = lb, ub, dom          # reuse parent arrays for left
             lu[v] = mval
-            if ll[v] <= lu[v] and self.propagate(ll, lu, dirty=[v]):
-                stack.append((ll, lu))
+            if ll[v] <= lu[v] and self.propagate(ll, lu, ld, dirty=[v]):
+                stack.append((ll, lu, ld))
             else:
                 n_fails += 1
 

@@ -1,0 +1,251 @@
+"""Bit-packed finite domains (DESIGN.md §17).
+
+The source paper's solver operates over abstract domains richer than the
+plain bounds intervals of `lattice.py`; extensional (Compact-Table)
+propagation in particular needs the *set* of remaining values per
+variable, not just its hull.  This module materializes that domain as
+packed machine words
+
+    dom : u32[..., V, W]     (bit k of word w of var v  ⇔
+                              value  off[v] + 32·w + k  is still possible)
+
+where ``off[v]`` is the variable's initial lower bound and ``W`` (the
+compile-time static ``n_words``) covers the widest tracked variable.
+Like the interval store, the bitset store is a lattice — ordered by
+*information*: fewer values = more information, so
+
+    join (⊔)  =  bitwise AND   (intersection of value sets)
+    meet      =  bitwise OR
+    bottom    =  all bits of the initial range set
+    top       =  no bits set   (empty domain == failure)
+
+Word-level primitives only — popcount / count-leading-zeros /
+count-trailing-zeros are branch-free SWAR forms so the same code lowers
+on XLA and inside Pallas kernel bodies.  `from_bounds` / `to_bounds`
+bridge to the interval lattice: the sweep re-derives ``dom`` from a
+bounds tell and re-tightens bounds from the domain hull each sweep, so
+the two lattices stay mutually consistent (a Galois connection, tested
+in tests/test_bitset_props.py).
+
+Variables wider than 32·W words cannot be represented; they are left
+*untracked* (their words pinned to all-ones and never consulted) — the
+compile-time ``dom_track`` mask says which is which.  Host-side numpy
+mirrors at the bottom serve the sequential baseline and the property
+tests (same SWAR code on np.uint32).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+FULL = np.uint32(0xFFFFFFFF)
+
+_M1 = np.uint32(0x55555555)
+_M2 = np.uint32(0x33333333)
+_M4 = np.uint32(0x0F0F0F0F)
+_H01 = np.uint32(0x01010101)
+
+
+def n_words_for(width: int) -> int:
+    """Words needed for a domain of `width` values (host-side static)."""
+    return max(1, -(-int(width) // WORD_BITS))
+
+
+# --- word-level SWAR primitives (uint32 in, uint32 out) -------------------
+
+def popcount(x):
+    """Set bits per word (SWAR — no table, no loop; Pallas-safe)."""
+    x = x - ((x >> 1) & _M1)
+    x = (x & _M2) + ((x >> 2) & _M2)
+    x = (x + (x >> 4)) & _M4
+    return (x * _H01) >> 24            # uint32 wraparound is intended
+
+
+def ctz(x):
+    """Trailing zeros per word; 32 for an empty word."""
+    # x & -x isolates the lowest set bit; minus one masks the zeros below
+    return popcount((x & (~x + np.uint32(1))) - np.uint32(1))
+
+
+def clz(x):
+    """Leading zeros per word; 32 for an empty word."""
+    x = x | (x >> 1)
+    x = x | (x >> 2)
+    x = x | (x >> 4)
+    x = x | (x >> 8)
+    x = x | (x >> 16)
+    return np.uint32(WORD_BITS) - popcount(x)
+
+
+def low_mask(n):
+    """Word with bits [0, n) set, for n clipped into [0, 32]."""
+    n = jnp.clip(n, 0, WORD_BITS).astype(jnp.uint32)
+    shift = jnp.minimum(n, np.uint32(WORD_BITS - 1))
+    return jnp.where(n >= WORD_BITS, FULL,
+                     (np.uint32(1) << shift) - np.uint32(1))
+
+
+# --- lattice contract ------------------------------------------------------
+
+def join(a, b):
+    """⊔ in the bitset lattice: intersection of value sets (AND)."""
+    return a & b
+
+
+def meet(a, b):
+    """⊓: union of value sets (OR)."""
+    return a | b
+
+
+def leq(a, b):
+    """a ≤ b in information order: b's value set ⊆ a's.  Per-var bool."""
+    return jnp.all((b & ~a) == 0, axis=-1)
+
+
+def is_empty(dom):
+    """Top of the lattice per variable == failure (no value left)."""
+    return jnp.all(dom == 0, axis=-1)
+
+
+def count(dom):
+    """|dom| per variable (uint32)."""
+    return popcount(dom).sum(axis=-1)
+
+
+# --- interval bridges ------------------------------------------------------
+
+def from_bounds(lb, ub, off, n_words: int, track=None):
+    """Bitset of the interval [lb, ub] per var: ``u32[..., V, W]``.
+
+    `lb`/`ub` are ``[..., V]`` int stores, `off` the per-var value offset
+    (the initial lower bound).  An empty interval (lb > ub) packs to all
+    zeros.  With `track` (``[V]``, nonzero = tracked), untracked vars are
+    pinned to all-ones — their words carry no information and are never
+    consulted by the normalizer.
+    """
+    base = (jnp.arange(n_words, dtype=jnp.int32) * WORD_BITS)   # [W]
+    rel_lo = (lb - off[..., :])[..., None].astype(jnp.int32) - base
+    rel_hi = (ub - off[..., :] + 1)[..., None].astype(jnp.int32) - base
+    words = low_mask(rel_hi) & ~low_mask(rel_lo)                # [..., V, W]
+    if track is not None:
+        words = jnp.where((track != 0)[..., :, None], words, FULL)
+    return words
+
+
+def min_value(dom, off):
+    """Smallest remaining value per var; ``off + 32·W`` when empty."""
+    W = dom.shape[-1]
+    base = jnp.arange(W, dtype=jnp.uint32) * WORD_BITS
+    pos = jnp.where(dom != 0, base + ctz(dom),
+                    np.uint32(W * WORD_BITS)).min(axis=-1)
+    return off + pos.astype(off.dtype)
+
+
+def max_value(dom, off):
+    """Largest remaining value per var; ``off - 1`` when empty."""
+    W = dom.shape[-1]
+    base = jnp.arange(W, dtype=jnp.int32) * WORD_BITS
+    hi = (base + WORD_BITS - 1 - clz(dom).astype(jnp.int32))
+    pos = jnp.where(dom != 0, hi, -1).max(axis=-1)
+    return off + pos.astype(off.dtype)
+
+
+def to_bounds(dom, off):
+    """Interval hull (lo, hi) of the domain; lo > hi iff empty.
+
+    An empty domain yields ``(off + 32·W, off - 1)``, which crosses the
+    initial box in both directions — joining it into a bounds store
+    always produces lb > ub (failure), even after the box clamp.
+    """
+    return min_value(dom, off), max_value(dom, off)
+
+
+def has_value(dom, val, off):
+    """Membership test per var (val/off broadcastable int arrays)."""
+    bit = (val - off).astype(jnp.int32)
+    W = dom.shape[-1]
+    ok = (bit >= 0) & (bit < W * WORD_BITS)
+    w = jnp.clip(bit >> 5, 0, W - 1)
+    word = jnp.take_along_axis(dom, w[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    mask = np.uint32(1) << (bit & 31).astype(jnp.uint32)
+    return ok & ((word & mask) != 0)
+
+
+# --- host-side mirrors (sequential baseline & property tests) --------------
+
+def np_popcount(x):
+    x = np.asarray(x, dtype=np.uint32)
+    x = x - ((x >> 1) & _M1)
+    x = (x & _M2) + ((x >> 2) & _M2)
+    x = (x + (x >> 4)) & _M4
+    return (x * _H01) >> 24
+
+
+def np_from_bounds(lb, ub, off, n_words: int, track=None):
+    lb = np.asarray(lb)
+    ub = np.asarray(ub)
+    off = np.asarray(off)
+    base = np.arange(n_words, dtype=np.int64) * WORD_BITS
+    rel_lo = np.clip((lb - off)[..., None] - base, 0, WORD_BITS)
+    rel_hi = np.clip((ub - off + 1)[..., None] - base, 0, WORD_BITS)
+
+    def lowm(n):
+        n = n.astype(np.uint64)
+        return ((np.uint64(1) << n) - np.uint64(1)).astype(np.uint32)
+
+    words = lowm(rel_hi) & ~lowm(rel_lo)
+    if track is not None:
+        words = np.where((np.asarray(track) != 0)[..., :, None], words, FULL)
+    return words
+
+
+def np_count(dom):
+    return np_popcount(dom).sum(axis=-1)
+
+
+def np_is_empty(dom):
+    return np.all(np.asarray(dom) == 0, axis=-1)
+
+
+def np_to_bounds(dom, off):
+    dom = np.asarray(dom, dtype=np.uint32)
+    off = np.asarray(off)
+    W = dom.shape[-1]
+    base = np.arange(W, dtype=np.int64) * WORD_BITS
+    tz = np_popcount((dom & (~dom + np.uint32(1))) - np.uint32(1))
+    lo_pos = np.where(dom != 0, base + tz, W * WORD_BITS).min(axis=-1)
+    sm = dom.copy()
+    for s in (1, 2, 4, 8, 16):
+        sm = sm | (sm >> s)
+    lz = WORD_BITS - np_popcount(sm)
+    hi_pos = np.where(dom != 0, base + WORD_BITS - 1 - lz.astype(np.int64),
+                      -1).max(axis=-1)
+    return off + lo_pos.astype(off.dtype), off + hi_pos.astype(off.dtype)
+
+
+def np_has_value(dom, val, off):
+    dom = np.asarray(dom, dtype=np.uint32)
+    bit = np.asarray(val - off, dtype=np.int64)
+    W = dom.shape[-1]
+    ok = (bit >= 0) & (bit < W * WORD_BITS)
+    w = np.clip(bit >> 5, 0, W - 1)
+    word = np.take_along_axis(dom, w[..., None], axis=-1)[..., 0]
+    mask = (np.uint32(1) << (bit & 31).astype(np.uint32))
+    return ok & ((word & mask) != 0)
+
+
+def np_clear_value(dom, val, off):
+    """Remove one value (x ≠ v branching); out-of-range vals are no-ops."""
+    dom = np.asarray(dom, dtype=np.uint32).copy()
+    bit = np.asarray(val - off, dtype=np.int64)
+    W = dom.shape[-1]
+    ok = (bit >= 0) & (bit < W * WORD_BITS)
+    w = np.clip(bit >> 5, 0, W - 1)
+    mask = np.where(ok, np.uint32(1) << (bit & 31).astype(np.uint32),
+                    np.uint32(0))
+    cur = np.take_along_axis(dom, w[..., None], axis=-1)[..., 0]
+    np.put_along_axis(dom, w[..., None], (cur & ~mask)[..., None], axis=-1)
+    return dom

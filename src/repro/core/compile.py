@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.bitset import WORD_BITS, n_words_for
 from repro.core.model import Model, ReifLinLe, TRUE_VAR
 
 # slot code for "this occurrence is the reified boolean of the propagator"
@@ -105,6 +106,17 @@ def cumulative_sparse_tile_bytes(cu_packed: int, itemsize: int) -> int:
     """Per-lane scratch of `cumulative_candidates_sparse_tile`: event
     arrays linear in M plus one [M, 2M] boolean overload reduction."""
     return (2 * cu_packed ** 2) + 16 * cu_packed * itemsize
+
+
+def ct_tile_bytes(n_table: int, ct_arity: int, n_words: int,
+                  ct_words: int) -> int:
+    """Per-lane sweep scratch of `ct_candidates_tile` (DESIGN.md §17):
+    the [T+1, R, 32W] member-value bits, the [T+1, R, 32W, TW] survivor
+    intersection, and the OR-reduced support words (~3 live u32 copies).
+    """
+    if not n_table:
+        return 0
+    return 3 * (n_table + 1) * ct_arity * (32 * n_words) * ct_words * 4
 
 
 def _resolve_layout(bank_layout: str, dense_bytes: int, kind: str,
@@ -174,6 +186,19 @@ class CompiledModel:
     cu_pk_dur: jax.Array    # i[Mcu]
     cu_pk_dem: jax.Array    # i[Mcu]
     cu_pk_seg: jax.Array    # i[Mcu]   owning row; == C for padding
+    # compact-table bank (row T is the neutral dummy; DESIGN.md §17):
+    # supports are packed tuple bitsets per (member slot, value index k),
+    # where k indexes value dom_off[var] + k in the bitset domain layout
+    ct_vars: jax.Array      # i[T+1, R]          member var (0 for padding)
+    ct_mask: jax.Array      # i[T+1, R]          1 = real member
+    ct_supp: jax.Array      # u32[T+1, R, 32W, TW]  tuple bitset per value
+    ct_occ_inst: jax.Array  # i[V, Dct]
+    ct_occ_pos: jax.Array   # i[V, Dct]
+    # bitset domain layout (DESIGN.md §17): value of bit k of var v is
+    # dom_off[v] + k; vars wider than 32·n_words are untracked (their
+    # words pinned to all-ones and never consulted)
+    dom_off: jax.Array      # i[V]   per-var value offset (= lb0)
+    dom_track: jax.Array    # u32[V] 1 = domain representable in n_words
     # search
     branch_vars: jax.Array  # i[B] decision vars in branching order
     # static metadata
@@ -194,6 +219,12 @@ class CompiledModel:
     cu_layout: str = dataclasses.field(metadata=dict(static=True))
     ad_packed: int = dataclasses.field(metadata=dict(static=True))
     cu_packed: int = dataclasses.field(metadata=dict(static=True))
+    # compact-table / bitset statics (DESIGN.md §17)
+    n_table: int = dataclasses.field(metadata=dict(static=True))
+    ct_arity: int = dataclasses.field(metadata=dict(static=True))
+    ct_words: int = dataclasses.field(metadata=dict(static=True))
+    ct_docc: int = dataclasses.field(metadata=dict(static=True))
+    n_words: int = dataclasses.field(metadata=dict(static=True))
     obj_var: int = dataclasses.field(metadata=dict(static=True))  # -1 if satisfaction
     dtype: str = dataclasses.field(metadata=dict(static=True))
     name: str = dataclasses.field(metadata=dict(static=True))
@@ -205,8 +236,8 @@ class CompiledModel:
     @property
     def total_props(self) -> int:
         """Propagator-table rows across all kinds (dummies excluded) —
-        the count the §12 bench/regression guards compare."""
-        return self.n_props + self.n_alldiff + self.n_cumulative
+        the count the §12/§17 bench/regression guards compare."""
+        return self.n_props + self.n_alldiff + self.n_cumulative + self.n_table
 
 
 def compile_model(
@@ -224,7 +255,7 @@ def compile_model(
     V = m.n_vars
     props: List[ReifLinLe] = m.props
     P = len(props)
-    if P == 0 and not (m.alldiffs or m.cumulatives):
+    if P == 0 and not (m.alldiffs or m.cumulatives or m.tables):
         raise ValueError("model has no constraints")
 
     K = max((len(p.lin.terms) for p in props), default=1)
@@ -381,6 +412,59 @@ def compile_model(
     cu_ptr[C] = k_
     cu_ptr[C + 1] = Mcu
 
+    # ---- compact-table bank + bitset domain layout (DESIGN.md §17) ------
+    branch = list(m.branch_order) if m.branch_order else list(range(1, V))
+    # ensure every non-fixed var is ultimately branchable: append leftovers
+    missing = [v for v in range(1, V) if v not in set(branch)]
+    branch = branch + missing
+
+    Tn = len(m.tables)
+    R = max((len(t.vars) for t in m.tables), default=1)
+    widths = ub0 - lb0 + 1
+    # With tables, n_words covers every table member AND every branch
+    # var (tables need the member domains as bitsets; covering the
+    # branch vars too lets middle-out track them for free — table
+    # models' bank shapes are instance-dependent anyway).  WITHOUT
+    # tables n_words is pinned to 1 so same-shaped instances keep
+    # hitting the compiled-runner cache regardless of their bounds;
+    # middle-out leaves vars wider than 32 values untracked, where its
+    # selection and branching degrade per-var to exactly VAL_SPLIT
+    # (pinned all-ones words put the nearest remaining value at the
+    # interval midpoint, and apply_path_tile tells x ≥ m+1 instead of
+    # a bit clear).
+    if Tn:
+        dom_vars = sorted({v for t in m.tables for v in t.vars}
+                          | set(branch))
+        n_words = n_words_for(int(widths[dom_vars].max()))
+    else:
+        n_words = 1
+    K32 = WORD_BITS * n_words
+    maxT = max((len(t.tuples) for t in m.tables), default=1)
+    TW = max(1, -(-maxT // WORD_BITS))
+    ct_vars = np.zeros((Tn + 1, R), dtype=np.int64)
+    ct_mask = np.zeros((Tn + 1, R), dtype=np.int64)
+    ct_supp = np.zeros((Tn + 1, R, K32, TW), dtype=np.uint32)
+    ct_occs: List[List[Tuple[int, int]]] = [[] for _ in range(V)]
+    for ti, tb in enumerate(m.tables):
+        for r, v in enumerate(tb.vars):
+            ct_vars[ti, r] = v
+            ct_mask[ti, r] = 1
+            ct_occs[v].append((ti, r))
+        for j, tup in enumerate(tb.tuples):
+            for r, (v, val) in enumerate(zip(tb.vars, tup)):
+                k = int(val) - int(lb0[v])  # in [0, width) by Model.table
+                ct_supp[ti, r, k, j // WORD_BITS] |= (
+                    np.uint32(1) << np.uint32(j % WORD_BITS))
+    Dct = max(max((len(o) for o in ct_occs), default=1), 1)
+    Dct = _round_up(Dct, 4) if Tn else 1
+    ct_occ_inst = np.full((V, Dct), Tn, dtype=np.int64)  # pad -> dummy row
+    ct_occ_pos = np.zeros((V, Dct), dtype=np.int64)
+    for v, o in enumerate(ct_occs):
+        for d, (ti, r) in enumerate(o):
+            ct_occ_inst[v, d] = ti
+            ct_occ_pos[v, d] = r
+    dom_track = (widths <= K32).astype(np.uint32)
+
     # ---- dtype selection with overflow headroom ------------------------
     absmax = np.maximum(np.abs(lb0), np.abs(ub0)) + 1           # per var
     worst = int((np.abs(coef[:P]) * absmax[vidx[:P]]).sum(axis=1).max()) \
@@ -396,6 +480,9 @@ def compile_model(
                     int(cu_dem[:C].sum(axis=1).max()), int(cu_cap[:C].max()))
     # sparse tiles compare member *counts* against interval widths
     worst = max(worst, Mad, Mcu)
+    # bitset hull bridge: an empty tracked domain reads back as
+    # (off + 32·n_words, off - 1)
+    worst = max(worst, int(np.abs(lb0).max()) + K32 + 2)
     if force_dtype is not None:
         dtype = force_dtype
     elif worst * 4 < np.iinfo(np.int32).max:
@@ -404,11 +491,6 @@ def compile_model(
         dtype = "int64"
     if worst * 4 >= np.iinfo(np.int64).max:
         raise OverflowError("model exceeds int64 headroom")
-
-    branch = list(m.branch_order) if m.branch_order else list(range(1, V))
-    # ensure every non-fixed var is ultimately branchable: append leftovers
-    missing = [v for v in range(1, V) if v not in set(branch)]
-    branch = branch + missing
 
     if dtype == "int64" and not jax.config.jax_enable_x64:
         raise OverflowError(
@@ -440,12 +522,17 @@ def compile_model(
         cu_ptr=cast(cu_ptr), cu_pk_svar=cast(cu_pk_svar),
         cu_pk_dur=cast(cu_pk_dur), cu_pk_dem=cast(cu_pk_dem),
         cu_pk_seg=cast(cu_pk_seg),
+        ct_vars=cast(ct_vars), ct_mask=cast(ct_mask),
+        ct_supp=jnp.asarray(ct_supp),
+        ct_occ_inst=cast(ct_occ_inst), ct_occ_pos=cast(ct_occ_pos),
+        dom_off=cast(lb0), dom_track=jnp.asarray(dom_track),
         branch_vars=cast(np.asarray(branch)),
         n_vars=V, n_props=P, k_terms=K, d_occ=D,
         n_alldiff=A, ad_width=N, ad_docc=Dad,
         n_cumulative=C, cu_width=T, cu_docc=Dcu, horizon=horizon,
         ad_layout=ad_layout, cu_layout=cu_layout,
         ad_packed=Mad, cu_packed=Mcu,
+        n_table=Tn, ct_arity=R, ct_words=TW, ct_docc=Dct, n_words=n_words,
         obj_var=(m.objective if m.objective is not None else -1),
         dtype=dtype, name=m.name,
     )

@@ -47,8 +47,10 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
+from repro.core import bitset as B
 from repro.core.compile import CompiledModel
 from repro.core.model import TRUE_VAR
 
@@ -456,14 +458,120 @@ def _gather_join_flat(cand_lb, cand_ub, occ, L):
     return g_lb, g_ub
 
 
+def ct_candidates_tile(lb, ub, dom, ct_vars, ct_mask, ct_supp, dom_off,
+                       n_table: int):
+    """Compact-Table tells for the extensional bank (DESIGN.md §17).
+
+    Pure-array form over a ``[L, V]`` bounds tile plus its ``[L, V, W]``
+    bitset domain; shared verbatim by all four backends.  The *reset*
+    variant of Compact-Table, stateless per sweep:
+
+      1. gather each member's remaining value bits from `dom`;
+      2. per member, OR the supports of its remaining values — the sum
+         of disjoint tuple bitsets (each tuple has exactly ONE value per
+         position, so the masked supports never share a bit and integer
+         SUM is exact OR);
+      3. AND the per-member words into the current table; an all-zero
+         current table fails the row (every member's lb is pushed past
+         its box);
+      4. a value survives iff its support intersects the current table:
+         the surviving bits give each member a filtered domain word mask
+         and a [min, max] hull candidate.
+
+    Monotone: shrink `dom` and the masked supports only shrink, so the
+    current table and the surviving sets shrink (a propagator in the
+    paper's Lemma-1 sense).  Returns (cand_lb, cand_ub, cand_dom) of
+    shapes ``[L, T1, R]`` ×2 and ``[L, T1, R, W]``; padded member slots
+    and the dummy row T are neutral (±big bounds, all-ones words).
+    """
+    dt = lb.dtype
+    neu_ub, neu_lb = _neutrals(dt)
+    L = lb.shape[0]
+    T1, R, K32, TW = ct_supp.shape
+    W = K32 // B.WORD_BITS
+    # 1. member value bits, unpacked to the [K32] value axis
+    mdom = jnp.take(dom, ct_vars.reshape(-1), axis=1
+                    ).reshape(L, T1, R, W)                  # [L,T1,R,W]
+    shifts = jnp.arange(B.WORD_BITS, dtype=jnp.uint32)
+    vb = (mdom[..., None] >> shifts) & np.uint32(1)         # [L,T1,R,W,32]
+    vb = vb.reshape(L, T1, R, K32)
+    # 2. OR of supports of remaining values == SUM of disjoint bitsets
+    supp_on = vb[..., None] * ct_supp[None]                 # [L,T1,R,K32,TW]
+    mor = supp_on.sum(axis=3)                               # [L,T1,R,TW]
+    # 3. current table = AND over real members (padding slots all-ones)
+    real = (ct_mask[None] != 0)                             # [1,T1,R]
+    mor = jnp.where(real[..., None], mor, B.FULL)
+    curr = mor[:, :, 0, :]
+    for r in range(1, R):                       # R is static & small
+        curr = curr & mor[:, :, r, :]
+    fail = jnp.all(curr == 0, axis=-1)                      # [L,T1]
+    # 4. surviving values = supports intersecting the current table
+    surv = jnp.any((ct_supp[None] & curr[:, :, None, None, :]) != 0,
+                   axis=-1)                                 # [L,T1,R,K32]
+    ks = jnp.arange(K32, dtype=dt)
+    kmin = jnp.where(surv, ks, neu_ub).min(axis=-1)         # [L,T1,R]
+    kmax = jnp.where(surv, ks, neu_lb).max(axis=-1)
+    omem = jnp.take(dom_off, ct_vars.reshape(-1)).reshape(T1, R)
+    cand_lb = jnp.where(real, omem[None] + kmin, neu_lb)
+    cand_ub = jnp.where(real, omem[None] + kmax, neu_ub)
+    # row failure: push every real member past its box (like the other
+    # kinds, the box clamp turns -neu_lb into box_hi, crossing ub)
+    cand_lb = jnp.where(fail[:, :, None] & real, -neu_lb, cand_lb)
+    # pack the surviving bits back into domain words
+    weights = np.uint32(1) << shifts
+    cand_dom = (surv.astype(jnp.uint32).reshape(L, T1, R, W, B.WORD_BITS)
+                * weights).sum(axis=-1)                     # [L,T1,R,W]
+    cand_dom = jnp.where(real[..., None], cand_dom, B.FULL)
+    return cand_lb, cand_ub, cand_dom
+
+
+def _gather_join_dom(cand_dom, occ_inst, occ_pos, dom):
+    """Variable-centric join of the CT bank's domain-word candidates:
+    each var ANDs the masks of its occurrences into its words (the
+    bitset-lattice ⊔).  Both join strategies use this same gather form —
+    there is no scatter-AND primitive, and ⊔-associativity makes the
+    strategy irrelevant to the result."""
+    L, _, R, W = cand_dom.shape
+    V, D = occ_inst.shape
+    occ = (occ_inst * R + occ_pos).reshape(-1)
+    g = jnp.take(cand_dom.reshape(L, -1, W), occ, axis=1
+                 ).reshape(L, V, D, W)
+    for d in range(D):                          # D is static & small
+        dom = dom & g[:, :, d]
+    return dom
+
+
+def dom_normalize_tile(lb, ub, dom, dom_off, dom_track, box_lo, box_hi,
+                       n_words: int):
+    """Re-sync the two lattices after a sweep's joins (DESIGN.md §17):
+    the bitset loses the values outside [lb, ub], and the bounds tighten
+    to the bitset's hull.  Untracked vars (dom_track == 0) pass through
+    on both sides.  An empty tracked domain reads back as the crossed
+    hull (off + 32W, off - 1), which the box clamp keeps crossed — so
+    bitset wipeout is bounds failure, the one failure signal every
+    engine layer already watches."""
+    trk = (dom_track != 0)[None, :]
+    rng = B.from_bounds(lb, ub, dom_off, n_words)
+    dom = jnp.where(trk[..., None], dom & rng, dom)
+    lo, hi = B.to_bounds(dom, dom_off)
+    nlb = jnp.maximum(lb, jnp.minimum(lo, box_hi[None, :]))
+    nub = jnp.minimum(ub, jnp.maximum(hi, box_lo[None, :]))
+    nlb = jnp.where(trk, nlb, lb)
+    nub = jnp.where(trk, nub, ub)
+    return nlb, nub, dom
+
+
 def sweep_tile(lb, ub, vidx, coef, rhs, bidx, occ_prop, occ_slot,
                ad_vars, ad_offs, ad_mask, ad_occ_inst, ad_occ_pos,
                ad_ptr, ad_pk_var, ad_pk_off, ad_pk_seg,
                cu_svar, cu_dur, cu_dem, cu_cap, cu_occ_inst, cu_occ_pos,
                cu_ptr, cu_pk_svar, cu_pk_dur, cu_pk_dem, cu_pk_seg,
+               ct_vars, ct_mask, ct_supp, ct_occ_inst, ct_occ_pos,
+               dom_off, dom_track,
                box_lo, box_hi, *, horizon: int, n_alldiff: int = 0,
                n_cumulative: int = 0, ad_layout: str = "dense",
-               cu_layout: str = "dense") -> Tuple[jax.Array, jax.Array]:
+               cu_layout: str = "dense", n_table: int = 0,
+               n_words: int = 1, dom=None):
     """One eventless sweep over a ``[L, V]`` tile of stores (gather form),
     dispatching over the typed propagator banks (DESIGN.md §12).
 
@@ -477,6 +585,16 @@ def sweep_tile(lb, ub, vidx, coef, rhs, bidx, occ_prop, occ_slot,
     ``ad_layout``/``cu_layout`` pick the dense or the packed/segmented
     tile per bank (compile-time crossover, DESIGN.md §16) — same
     semantics, different scratch scaling.
+
+    With ``n_table`` tables (DESIGN.md §17) the sweep also runs the
+    Compact-Table tile over the bitset domain.  `dom` (``[L, V, W]``
+    uint32 or None) opts the caller into carrying the bitset store:
+    when given, the CT tile filters it, the sweep ends with
+    `dom_normalize_tile`, and a 3-tuple (lb, ub, dom) is returned.
+    When None on a table model, a transient range-set domain is derived
+    from the current bounds for the CT tile (sound — a superset of any
+    carried domain — just weaker on interval holes) and the legacy
+    2-tuple comes back unchanged in shape.
     """
     L = lb.shape[0]
     cand_lb, cand_ub = candidates_tile(lb, ub, vidx, coef, rhs, bidx)
@@ -509,11 +627,26 @@ def sweep_tile(lb, ub, vidx, coef, rhs, bidx, occ_prop, occ_slot,
                                       L)
         g_lb = jnp.maximum(g_lb, j_lb)
         g_ub = jnp.minimum(g_ub, j_ub)
+    if n_table:
+        d_in = dom if dom is not None else B.from_bounds(
+            lb, ub, dom_off, n_words, track=dom_track)
+        ct_lb, ct_ub, ct_dm = ct_candidates_tile(
+            lb, ub, d_in, ct_vars, ct_mask, ct_supp, dom_off, n_table)
+        j_lb, j_ub = _gather_join(ct_lb, ct_ub, ct_occ_inst, ct_occ_pos, L)
+        g_lb = jnp.maximum(g_lb, j_lb)
+        g_ub = jnp.minimum(g_ub, j_ub)
+        if dom is not None:
+            dom = _gather_join_dom(ct_dm, ct_occ_inst, ct_occ_pos, dom)
     # clamp candidates into the initial box (overflow guard; sound because
     # box_lo-1/box_hi+1 still cross the opposite bound on failure)
     g_ub = jnp.maximum(g_ub, box_lo[None, :])
     g_lb = jnp.minimum(g_lb, box_hi[None, :])
-    return jnp.maximum(lb, g_lb), jnp.minimum(ub, g_ub)
+    nlb = jnp.maximum(lb, g_lb)
+    nub = jnp.minimum(ub, g_ub)
+    if dom is None:
+        return nlb, nub
+    return dom_normalize_tile(nlb, nub, dom, dom_off, dom_track,
+                              box_lo, box_hi, n_words)
 
 
 def model_tables(cm: CompiledModel) -> Tuple:
@@ -525,6 +658,8 @@ def model_tables(cm: CompiledModel) -> Tuple:
             cm.ad_pk_seg, cm.cu_svar, cm.cu_dur, cm.cu_dem, cm.cu_cap,
             cm.cu_occ_inst, cm.cu_occ_pos, cm.cu_ptr, cm.cu_pk_svar,
             cm.cu_pk_dur, cm.cu_pk_dem, cm.cu_pk_seg,
+            cm.ct_vars, cm.ct_mask, cm.ct_supp, cm.ct_occ_inst,
+            cm.ct_occ_pos, cm.dom_off, cm.dom_track,
             cm.box_lo, cm.box_hi)
 
 
@@ -532,7 +667,8 @@ def model_statics(cm: CompiledModel) -> dict:
     """The static (kind/layout-dispatch) kwargs of `sweep_tile`."""
     return dict(horizon=cm.horizon, n_alldiff=cm.n_alldiff,
                 n_cumulative=cm.n_cumulative,
-                ad_layout=cm.ad_layout, cu_layout=cm.cu_layout)
+                ad_layout=cm.ad_layout, cu_layout=cm.cu_layout,
+                n_table=cm.n_table, n_words=cm.n_words)
 
 
 def propagator_candidates(cm: CompiledModel, lb: jax.Array, ub: jax.Array
@@ -556,15 +692,15 @@ def sweep(cm: CompiledModel, lb: jax.Array, ub: jax.Array
     return nlb[0], nub[0]
 
 
-def sweep_batch(cm: CompiledModel, lb: jax.Array, ub: jax.Array
-                ) -> Tuple[jax.Array, jax.Array]:
+def sweep_batch(cm: CompiledModel, lb: jax.Array, ub: jax.Array, dom=None):
     """Gather sweep over lane-batched ``[L, V]`` stores — one tensor op for
-    the whole batch (the TURBO shape: every lane's sweep in one launch)."""
-    return sweep_tile(lb, ub, *model_tables(cm), **model_statics(cm))
+    the whole batch (the TURBO shape: every lane's sweep in one launch).
+    Pass `dom` to carry the bitset store (3-tuple return, DESIGN.md §17)."""
+    return sweep_tile(lb, ub, *model_tables(cm), **model_statics(cm),
+                      dom=dom)
 
 
-def sweep_scatter(cm: CompiledModel, lb: jax.Array, ub: jax.Array
-                  ) -> Tuple[jax.Array, jax.Array]:
+def sweep_scatter(cm: CompiledModel, lb: jax.Array, ub: jax.Array, dom=None):
     """Propagator-centric scatter form of the same sweep (oracle).
 
     This is literally "each propagator writes its variables through an
@@ -621,13 +757,37 @@ def sweep_scatter(cm: CompiledModel, lb: jax.Array, ub: jax.Array
             jnp.maximum(cu_ub[0].reshape(-1), cm.box_lo[v]))
         new_lb = new_lb.at[v].max(
             jnp.minimum(cu_lb[0].reshape(-1), cm.box_hi[v]))
-    return new_lb, new_ub
+    if cm.n_table:
+        d_in = (dom[None] if dom is not None else B.from_bounds(
+            lb[None], ub[None], cm.dom_off, cm.n_words, track=cm.dom_track))
+        ct_lb, ct_ub, ct_dm = ct_candidates_tile(
+            lb[None], ub[None], d_in, cm.ct_vars, cm.ct_mask, cm.ct_supp,
+            cm.dom_off, cm.n_table)
+        v = cm.ct_vars.reshape(-1)
+        new_ub = new_ub.at[v].min(
+            jnp.maximum(ct_ub[0].reshape(-1), cm.box_lo[v]))
+        new_lb = new_lb.at[v].max(
+            jnp.minimum(ct_lb[0].reshape(-1), cm.box_hi[v]))
+        if dom is not None:
+            # bitset joins stay in gather form under the scatter strategy
+            # too: there is no scatter-AND join, and ⊔-associativity makes
+            # the strategy irrelevant (see _gather_join_dom)
+            dom = _gather_join_dom(ct_dm, cm.ct_occ_inst, cm.ct_occ_pos,
+                                   dom[None])[0]
+    if dom is None:
+        return new_lb, new_ub
+    nlb, nub, ndom = dom_normalize_tile(
+        new_lb[None], new_ub[None], dom[None], cm.dom_off, cm.dom_track,
+        cm.box_lo, cm.box_hi, cm.n_words)
+    return nlb[0], nub[0], ndom[0]
 
 
-def sweep_scatter_batch(cm: CompiledModel, lb: jax.Array, ub: jax.Array
-                        ) -> Tuple[jax.Array, jax.Array]:
+def sweep_scatter_batch(cm: CompiledModel, lb: jax.Array, ub: jax.Array,
+                        dom=None):
     """Scatter sweep over lane-batched ``[L, V]`` stores (vmapped joins)."""
-    return jax.vmap(partial(sweep_scatter, cm))(lb, ub)
+    if dom is None:
+        return jax.vmap(partial(sweep_scatter, cm))(lb, ub)
+    return jax.vmap(lambda l, u, d: sweep_scatter(cm, l, u, d))(lb, ub, dom)
 
 
 @partial(jax.jit, static_argnames=("max_iters", "stop_on_fail", "use_scatter"))
@@ -670,7 +830,8 @@ def fixpoint(cm: CompiledModel, lb: jax.Array, ub: jax.Array,
 
 def fixpoint_tile(lb, ub, *tables, horizon: int, n_alldiff: int = 0,
                   n_cumulative: int = 0, ad_layout: str = "dense",
-                  cu_layout: str = "dense",
+                  cu_layout: str = "dense", n_table: int = 0,
+                  n_words: int = 1, dom=None,
                   max_iters: Optional[int] = None,
                   stop_on_fail: bool = True, step=None):
     """Per-lane-masked fixpoint loop over a ``[L, V]`` tile (gather form).
@@ -685,16 +846,29 @@ def fixpoint_tile(lb, ub, *tables, horizon: int, n_alldiff: int = 0,
 
     `step` overrides the sweep function (the scatter backend passes its
     join strategy through here); default is `sweep_tile` on `tables`.
+    With `dom` (``[L, V, W]``) the bitset store rides in the carry (None
+    is an empty pytree, so the loop structure is unchanged without it)
+    and a sweep counts as "changed" when any domain word moved even if
+    the hull did not — interior Compact-Table wipeouts must keep the
+    lane sweeping.
 
-    Returns (lb', ub', sweeps[L], converged[L]).
+    Returns (lb', ub', sweeps[L], converged[L]), with dom' inserted
+    before the counters when it is carried.
     """
     L = lb.shape[0]
+    have_dom = dom is not None
     if step is None:
-        def step(lb_, ub_):
+        def step(lb_, ub_, dom_):
             return sweep_tile(lb_, ub_, *tables, horizon=horizon,
                               n_alldiff=n_alldiff,
                               n_cumulative=n_cumulative,
-                              ad_layout=ad_layout, cu_layout=cu_layout)
+                              ad_layout=ad_layout, cu_layout=cu_layout,
+                              n_table=n_table, n_words=n_words, dom=dom_)
+    elif not have_dom:
+        _step2 = step
+
+        def step(lb_, ub_, dom_):
+            return _step2(lb_, ub_)
 
     def lane_live(lb_, ub_, changed, it):
         ok = changed
@@ -705,29 +879,38 @@ def fixpoint_tile(lb, ub, *tables, horizon: int, n_alldiff: int = 0,
         return ok                                          # bool[L]
 
     def cond(st):
-        lb_, ub_, changed, it = st
+        lb_, ub_, dom_, changed, it = st
         return jnp.any(lane_live(lb_, ub_, changed, it))
 
     def body(st):
-        lb_, ub_, changed, it = st
+        lb_, ub_, dom_, changed, it = st
         active = lane_live(lb_, ub_, changed, it)
-        nlb, nub = step(lb_, ub_)
+        out = step(lb_, ub_, dom_)
+        if have_dom:
+            nlb, nub, ndom = out
+            ndom = jnp.where(active[:, None, None], ndom, dom_)
+        else:
+            (nlb, nub), ndom = out, dom_
         nlb = jnp.where(active[:, None], nlb, lb_)
         nub = jnp.where(active[:, None], nub, ub_)
         ch = jnp.any((nlb != lb_) | (nub != ub_), axis=1)
+        if have_dom:
+            ch = ch | jnp.any(ndom != dom_, axis=(1, 2))
         changed = jnp.where(active, ch, changed)
-        return nlb, nub, changed, it + active.astype(jnp.int32)
+        return nlb, nub, ndom, changed, it + active.astype(jnp.int32)
 
-    init = (lb, ub, jnp.ones((L,), bool), jnp.zeros((L,), jnp.int32))
-    lb, ub, changed, iters = lax.while_loop(cond, body, init)
+    init = (lb, ub, dom, jnp.ones((L,), bool), jnp.zeros((L,), jnp.int32))
+    lb, ub, dom, changed, iters = lax.while_loop(cond, body, init)
     converged = jnp.logical_not(changed) | jnp.any(lb > ub, axis=1)
+    if have_dom:
+        return lb, ub, dom, iters, converged
     return lb, ub, iters, converged
 
 
 @partial(jax.jit, static_argnames=("max_iters", "stop_on_fail", "use_scatter"))
 def fixpoint_batch(cm: CompiledModel, lb: jax.Array, ub: jax.Array,
-                   max_iters: Optional[int] = None, stop_on_fail: bool = True,
-                   use_scatter: bool = False):
+                   dom=None, max_iters: Optional[int] = None,
+                   stop_on_fail: bool = True, use_scatter: bool = False):
     """Lane-batched fixpoint: one `while_loop` over the whole ``[L, V]``
     store tensor, each sweep a single batched tensor op (`sweep_batch`).
 
@@ -736,12 +919,13 @@ def fixpoint_batch(cm: CompiledModel, lb: jax.Array, ub: jax.Array,
     while_loop degenerates to lockstep select-masking anyway.  The loop
     itself is `fixpoint_tile`, shared verbatim with the Pallas kernels.
 
-    Returns (lb', ub', sweeps[L], converged[L]).
+    Returns (lb', ub', sweeps[L], converged[L]); with `dom` carried the
+    bitset store is threaded through and returned before the counters.
     """
     step = partial(sweep_scatter_batch, cm) if use_scatter else None
     return fixpoint_tile(lb, ub, *model_tables(cm), **model_statics(cm),
-                         max_iters=max_iters, stop_on_fail=stop_on_fail,
-                         step=step)
+                         dom=dom, max_iters=max_iters,
+                         stop_on_fail=stop_on_fail, step=step)
 
 
 # --------------------------------------------------------------------------

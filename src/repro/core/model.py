@@ -183,6 +183,21 @@ class Cumulative:
     capacity: int
 
 
+@dataclasses.dataclass(frozen=True)
+class Table:
+    """(x₁, …, x_r) ∈ tuples — native extensional propagator
+    (DESIGN.md §17).
+
+    Compact-Table filtering over bit-packed finite domains in the
+    engine: per variable–value supports as tuple bitsets, a reset-based
+    current-table intersection, and domain words filtered by OR-ing the
+    surviving supports.  One row replaces the O(|tuples|·arity)
+    reified-disjunction decomposition."""
+
+    vars: Tuple[int, ...]
+    tuples: Tuple[Tuple[int, ...], ...]
+
+
 class Model:
     """A PCCP model: local statements (∃x:IZ) + parallel constraint tells."""
 
@@ -195,6 +210,7 @@ class Model:
         self.props: List[ReifLinLe] = []
         self.alldiffs: List[AllDifferent] = []
         self.cumulatives: List[Cumulative] = []
+        self.tables: List[Table] = []
         self.objective: Optional[int] = None      # var index to minimize
         self.branch_order: List[int] = []         # decision vars, in order
         # var 0 == constant true
@@ -265,7 +281,8 @@ class Model:
     @property
     def n_constraints(self) -> int:
         """Total propagator-table rows across all kinds."""
-        return len(self.props) + len(self.alldiffs) + len(self.cumulatives)
+        return (len(self.props) + len(self.alldiffs)
+                + len(self.cumulatives) + len(self.tables))
 
     def alldifferent(self, xs: Sequence[IntVar],
                      offsets: Optional[Sequence[int]] = None,
@@ -332,6 +349,49 @@ class Model:
                 continue
             expr = sum((coef * var for coef, var in terms), start=0)
             self.add(expr <= int(capacity))
+
+    def table(self, xs: Sequence[IntVar],
+              tuples: Sequence[Sequence[int]],
+              decompose: bool = False) -> None:
+        """(x₁, …, x_r) ∈ tuples — the extensional (arbitrary-relation)
+        constraint.
+
+        Default: ONE native `Table` row, filtered by Compact-Table on
+        bit-packed finite domains (DESIGN.md §17).  With
+        ``decompose=True`` the reified-disjunction lowering is emitted
+        instead — per tuple t, b_t ⇔ ∧_i (x_i = t_i), plus Σ b_t ≥ 1 —
+        an O(|tuples|·arity)-row `ReifLinLe` blowup kept as the parity
+        oracle (tests/test_compact_table.py).  Tuples with values outside
+        a member's initial domain can never be taken and are dropped.
+        """
+        xs = list(xs)
+        if not xs:
+            raise ValueError("table: no variables")
+        rows = []
+        for t in tuples:
+            t = tuple(int(v) for v in t)
+            if len(t) != len(xs):
+                raise ValueError(
+                    f"table: tuple {t} has arity {len(t)}, expected "
+                    f"{len(xs)}")
+            if all(self.lb0[x.idx] <= v <= self.ub0[x.idx]
+                   for x, v in zip(xs, t)):
+                rows.append(t)
+        if not rows:                      # no tuple fits: trivially false
+            self.add(LinLe(((TRUE_VAR, 1),), 0))
+            return
+        if decompose:
+            bs = []
+            for j, t in enumerate(rows):
+                bj = self.bool_var(f"tab{len(self.tables)}_t{j}")
+                lins = []
+                for x, v in zip(xs, t):
+                    lins += [x <= v, x >= v]
+                self.iff_and(bj, lins)
+                bs.append(bj)
+            self.add(sum(bs, LinExpr({}, 0)) >= 1)
+            return
+        self.tables.append(Table(tuple(x.idx for x in xs), tuple(rows)))
 
     def iff_and(self, b: IntVar, lins: Sequence[LinLe]) -> None:
         """⟦b ⇔ (φ₁ ∧ ... ∧ φ_m)⟧ via the standard decomposition

@@ -19,7 +19,8 @@ section and `examples/model_zoo.py`.
 
 from __future__ import annotations
 
-from repro.core.models import coloring, jobshop, knapsack, nqueens, rcpsp
+from repro.core.models import (coloring, configuration, crossword, jobshop,
+                               knapsack, nqueens, rcpsp)
 
 ZOO = {
     "rcpsp": rcpsp,
@@ -27,6 +28,8 @@ ZOO = {
     "coloring": coloring,
     "knapsack": knapsack,
     "jobshop": jobshop,
+    "crossword": crossword,
+    "configuration": configuration,
 }
 
 
@@ -45,6 +48,9 @@ _TIERS = {
     "knapsack": (dict(n=6), dict(n=10), dict(n=512)),
     "jobshop": (dict(n_jobs=2, n_machines=2), dict(n_jobs=3, n_machines=2),
                 dict(n_jobs=20, n_machines=15)),
+    "crossword": (dict(n=3), dict(n=4), dict(n=8)),
+    "configuration": (dict(k=4, m=4), dict(k=6, m=5),
+                      dict(k=24, m=8)),
 }
 assert set(_TIERS) == set(ZOO)
 

@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bitset as B
 from repro.core.compile import CompiledModel
 from repro.core.backend import get_backend
 
@@ -66,6 +67,10 @@ UNASSIGNED = np.iinfo(np.int32).max // 2
 # value-selection strategies
 VAL_MIN = "min"       # m = lb  (assign lower bound)
 VAL_SPLIT = "split"   # m = (lb+ub)//2
+# m = remaining domain value nearest the interval midpoint (ties low);
+# branches left x = m, right x ≠ m (a bitset-store tell — the strategy
+# activates the bitset domain even on pure-bounds models, DESIGN.md §17)
+VAL_MIDDLE_OUT = "middle_out"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +113,18 @@ class LaneState(NamedTuple):
     n_fails: jax.Array       # i64
     n_sols: jax.Array        # i64
     n_sweeps: jax.Array      # i64
+    # bitset domain stores (DESIGN.md §17) — None unless the model has
+    # tables or the value strategy is middle_out (None is an empty pytree
+    # leaf set, so inactive states keep the legacy carry structure)
+    dom: Optional[jax.Array] = None        # u32[L, V, W]
+    root_dom: Optional[jax.Array] = None   # u32[L, V, W]
+
+
+def use_dom(cm: CompiledModel, opts: SearchOptions) -> bool:
+    """Whether search must carry the bitset store: extensional models
+    always (Compact-Table filters value sets), and `middle_out` value
+    ordering on any model (its right branch x ≠ m is a bitset tell)."""
+    return cm.n_table > 0 or opts.val_strategy == VAL_MIDDLE_OUT
 
 
 def init_lanes(cm: CompiledModel, n_lanes: int, opts: SearchOptions) -> LaneState:
@@ -115,7 +132,10 @@ def init_lanes(cm: CompiledModel, n_lanes: int, opts: SearchOptions) -> LaneStat
     dt = cm.jdtype
     big = jnp.asarray(jnp.iinfo(dt).max // 4, dt)
     z = lambda *s: jnp.zeros(s, jnp.int32)  # noqa: E731
+    dom = (jnp.zeros((n_lanes, V, cm.n_words), jnp.uint32)
+           if use_dom(cm, opts) else None)
     return LaneState(
+        dom=dom, root_dom=dom,
         lb=jnp.zeros((n_lanes, V), dt), ub=jnp.zeros((n_lanes, V), dt),
         root_lb=jnp.zeros((n_lanes, V), dt), root_ub=jnp.zeros((n_lanes, V), dt),
         dec_var=jnp.zeros((n_lanes, opts.max_depth), jnp.int32),
@@ -169,31 +189,77 @@ def dispatch_pool(st: LaneState, pool_head, n_subs: int):
     return dispatch_pool_tile(st, pool_head, n_subs)
 
 
-def apply_path_tile(root_lb, root_ub, dec_var, dec_val, dec_flip, depth):
+def apply_path_tile(root_lb, root_ub, dec_var, dec_val, dec_flip, depth, *,
+                    val_strategy: str = VAL_MIN, root_dom=None,
+                    dom_off=None, dom_track=None):
     """Full recomputation for a ``[L, V]`` tile: root ⊔ all decision
     tells, in one flat scatter-min/max (per-lane duplicate indices are
     handled by the associative scatter join).  Pure-array form shared
-    verbatim by the unfused commit and the resident megakernel."""
+    verbatim by the unfused commit and the resident megakernel.
+
+    Interval strategies branch left x ≤ m / right x ≥ m+1.  Under
+    `middle_out` the left branch is the assignment x = m (both bounds
+    tell) and the right branch is x ≠ m — a *bitset* tell: the flipped
+    decisions' value bits are cleared from `root_dom` via one flat
+    scatter-add of their one-hot word masks (exact because a well-formed
+    path never flips the same (var, value) twice, so the added masks are
+    disjoint).  Decisions on *untracked* vars (dom_track == 0 — wider
+    than the 32·W bitset) fall back per-decision to the interval split
+    x ≤ m / x ≥ m+1, matching `select_branch_tile`'s degradation.
+    Returns (lb, ub) — plus the recomputed dom when `root_dom` is
+    carried.
+    """
     L, V = root_lb.shape
     md = dec_var.shape[1]
     lvl = jnp.arange(md)
     on = lvl[None, :] < depth[:, None]
     dt = root_lb.dtype
     big = jnp.asarray(jnp.iinfo(dt).max // 4, dt)
-    ub_tell = jnp.where(on & ~dec_flip, dec_val, big)          # left: x ≤ m
-    lb_tell = jnp.where(on & dec_flip, dec_val + 1, -big)      # right: x ≥ m+1
+    if val_strategy == VAL_MIDDLE_OUT:
+        trk = jnp.take(dom_track, dec_var.astype(jnp.int32)) != 0  # [L, MD]
+        ub_tell = jnp.where(on & ~dec_flip, dec_val, big)      # left: x = m
+        lb_tell = jnp.where(on & ~dec_flip & trk, dec_val,     # (x ≤ m wide)
+                            jnp.where(on & dec_flip & ~trk,    # wide right:
+                                      dec_val + 1, -big))      # x ≥ m+1
+    else:
+        ub_tell = jnp.where(on & ~dec_flip, dec_val, big)      # left: x ≤ m
+        lb_tell = jnp.where(on & dec_flip, dec_val + 1, -big)  # right: x ≥ m+1
     rows = jnp.arange(L, dtype=jnp.int32)[:, None] * V
     flat = (rows + dec_var.astype(jnp.int32)).reshape(-1)
     ub = root_ub.reshape(L * V).at[flat].min(ub_tell.reshape(-1))
     lb = root_lb.reshape(L * V).at[flat].max(lb_tell.reshape(-1))
-    return lb.reshape(L, V), ub.reshape(L, V)
+    lb, ub = lb.reshape(L, V), ub.reshape(L, V)
+    if root_dom is None:
+        return lb, ub
+    dom = root_dom
+    if val_strategy == VAL_MIDDLE_OUT:
+        # right branches: clear bit (dec_val - off) of the decision var
+        W = root_dom.shape[-1]
+        bit = (dec_val - jnp.take(dom_off, dec_var.astype(jnp.int32))
+               ).astype(jnp.int32)                             # [L, MD]
+        hit = on & dec_flip & trk & (bit >= 0) & (bit < W * B.WORD_BITS)
+        word = jnp.clip(bit >> 5, 0, W - 1)
+        mask = jnp.where(hit,
+                         np.uint32(1) << (bit & 31).astype(jnp.uint32),
+                         np.uint32(0))
+        flat_w = (rows * W + dec_var.astype(jnp.int32) * W + word
+                  ).reshape(-1)
+        acc = jnp.zeros((L * V * W,), jnp.uint32
+                        ).at[flat_w].add(mask.reshape(-1))
+        dom = dom & ~acc.reshape(L, V, W)
+    return lb, ub, dom
 
 
 def select_branch_tile(lb, ub, branch_vars, *, var_strategy: str,
-                       val_strategy: str):
+                       val_strategy: str, dom=None, dom_off=None):
     """Pick (var, m) for each lane's next decision over a ``[L, V]``
     tile.  Returns (var[L], m[L], any_unfixed[L]).  Pure-array form
-    shared verbatim by the unfused commit and the resident megakernel."""
+    shared verbatim by the unfused commit and the resident megakernel.
+
+    `middle_out` (requires the carried bitset `dom`) picks the remaining
+    domain value nearest the interval midpoint, ties to the lower value
+    — the fail-first ordering the ROADMAP flags as blocking dense
+    nqueens backtracking."""
     bv = branch_vars
     blb = jnp.take(lb, bv, axis=1)                          # [L, B]
     bub = jnp.take(ub, bv, axis=1)
@@ -216,6 +282,26 @@ def select_branch_tile(lb, ub, branch_vars, *, var_strategy: str,
         m = vlb
     elif val_strategy == VAL_SPLIT:
         m = (vlb + vub) // 2
+    elif val_strategy == VAL_MIDDLE_OUT:
+        if dom is None:
+            raise ValueError("middle_out value ordering needs the bitset "
+                             "domain store (search carries it whenever "
+                             "the strategy is selected)")
+        L, _, W = dom.shape
+        K32 = W * B.WORD_BITS
+        vdom = jnp.take_along_axis(
+            dom, var.astype(jnp.int32)[:, None, None], axis=1)[:, 0]
+        bits = ((vdom[:, :, None]
+                 >> jnp.arange(B.WORD_BITS, dtype=jnp.uint32))
+                & np.uint32(1)).reshape(L, K32)              # [L, 32W]
+        voff = jnp.take(dom_off, var.astype(jnp.int32))       # [L]
+        vals = voff[:, None] + jnp.arange(K32, dtype=lb.dtype)[None, :]
+        mid = (vlb + vub) // 2
+        ok = (bits != 0) & (vals >= vlb[:, None]) & (vals <= vub[:, None])
+        # 2·distance + 1 for the upper side: nearest wins, ties go low
+        score = 2 * jnp.abs(vals - mid[:, None]) + (vals > mid[:, None])
+        pos = jnp.argmin(jnp.where(ok, score, big), axis=1)
+        m = voff + pos.astype(lb.dtype)
     else:
         raise ValueError(val_strategy)
     return var, m, jnp.any(unfixed, axis=1)
@@ -233,10 +319,13 @@ class LanePrep(NamedTuple):
     next_sub: jax.Array      # i32[L]
     fresh: jax.Array         # bool[L]
     active: jax.Array        # bool[L] — lane participates this superstep
+    dom: Optional[jax.Array] = None        # u32[L, V, W] (bitset store)
+    root_dom: Optional[jax.Array] = None
 
 
 def lane_load_tile(subs_lb, subs_ub, st: LaneState, gbest, *,
-                   obj_var: int) -> LanePrep:
+                   obj_var: int, dom_off=None, dom_track=None,
+                   n_words: int = 1) -> LanePrep:
     """Pre-propagation phase over a lane tile: subproblem load + B&B tell.
 
     `subs_lb/ub`: the (tile-visible) subproblem pool [S, V] (assignment
@@ -263,6 +352,14 @@ def lane_load_tile(subs_lb, subs_ub, st: LaneState, gbest, *,
     next_sub = jnp.where(load, UNASSIGNED, st.next_sub)  # consumed
     fresh = st.fresh & ~load & ~st.done
     active = ~st.done & ~fresh
+    dom = root_dom = None
+    if st.dom is not None:
+        # the EPS pool is interval-only (eps.decompose splits boxes), so
+        # the subproblem's root bitset is exactly its box — lossless
+        fresh_dom = B.from_bounds(root_lb, root_ub, dom_off, n_words,
+                                  track=dom_track)
+        root_dom = jnp.where(loadc[..., None], fresh_dom, st.root_dom)
+        dom = jnp.where(loadc[..., None], root_dom, st.dom)
 
     # -- 2. branch & bound tell ------------------------------------------
     if obj_var >= 0:
@@ -274,12 +371,13 @@ def lane_load_tile(subs_lb, subs_ub, st: LaneState, gbest, *,
                        jnp.minimum(ub, tell[:, None]), ub)
     return LanePrep(lb=lb, ub=ub, root_lb=root_lb, root_ub=root_ub,
                     depth=depth, next_sub=next_sub, fresh=fresh,
-                    active=active)
+                    active=active, dom=dom, root_dom=root_dom)
 
 
 def lane_commit_tile(st: LaneState, pre: LanePrep, lb, ub, sweeps,
                      converged, branch_vars, *, obj_var: int,
-                     var_strategy: str, val_strategy: str) -> LaneState:
+                     var_strategy: str, val_strategy: str,
+                     dom=None, dom_off=None, dom_track=None) -> LaneState:
     """Post-propagation phase over a lane tile: record / backtrack-or-
     branch.  `lb`, `ub`, `sweeps`, `converged` are the batched backend
     fixpoint outputs.  Pure-array over ``[L, V]`` (shared verbatim by the
@@ -335,14 +433,25 @@ def lane_commit_tile(st: LaneState, pre: LanePrep, lb, ub, sweeps,
     depth_bt = (bt_level + 1).astype(jnp.int32)
 
     # full recomputation for backtracking lanes
-    rlb, rub = apply_path_tile(root_lb, root_ub, st.dec_var, st.dec_val,
-                               dec_flip, depth_bt)
+    root_dom = pre.root_dom
+    if dom is None:
+        rlb, rub = apply_path_tile(root_lb, root_ub, st.dec_var,
+                                   st.dec_val, dec_flip, depth_bt,
+                                   val_strategy=val_strategy,
+                                   dom_track=dom_track)
+    else:
+        rlb, rub, rdom = apply_path_tile(root_lb, root_ub, st.dec_var,
+                                         st.dec_val, dec_flip, depth_bt,
+                                         val_strategy=val_strategy,
+                                         root_dom=root_dom,
+                                         dom_off=dom_off,
+                                         dom_track=dom_track)
 
     # branching lanes (only at per-lane fixed points: unconverged lanes
     # do nothing this superstep and propagate further on the next)
     var, m, any_unfixed = select_branch_tile(
         lb, ub, branch_vars, var_strategy=var_strategy,
-        val_strategy=val_strategy)
+        val_strategy=val_strategy, dom=dom, dom_off=dom_off)
     do_branch = active & ~bt & converged & any_unfixed
     overflow = do_branch & (depth >= md)
     do_branch = do_branch & ~overflow
@@ -353,9 +462,15 @@ def lane_commit_tile(st: LaneState, pre: LanePrep, lb, ub, sweeps,
     dec_flip = jnp.where(upd, False, dec_flip)
     vcols = jnp.arange(V)
     btell = jnp.where(do_branch, m, big)                          # [L]
-    blb = lb
     bub = jnp.where(vcols[None, :] == var[:, None],               # left: x ≤ m
                     jnp.minimum(ub, btell[:, None]), ub)
+    if val_strategy == VAL_MIDDLE_OUT:                    # left: x = m
+        trk_var = jnp.take(dom_track, var.astype(jnp.int32)) != 0
+        btell_lo = jnp.where(do_branch & trk_var, m, -big)  # wide: x ≤ m
+        blb = jnp.where(vcols[None, :] == var[:, None],
+                        jnp.maximum(lb, btell_lo[:, None]), lb)
+    else:
+        blb = lb
 
     # -- 5. commit per-lane outcome ------------------------------------------
     new_lb = jnp.where(do_bt[:, None], rlb, blb)
@@ -364,6 +479,8 @@ def lane_commit_tile(st: LaneState, pre: LanePrep, lb, ub, sweeps,
                           jnp.where(do_branch, depth + 1, depth))
     fresh = fresh | exhausted | overflow
     incomplete = st.incomplete | overflow
+    new_dom = (None if dom is None
+               else jnp.where(do_bt[:, None, None], rdom, dom))
 
     return LaneState(
         lb=new_lb, ub=new_ub, root_lb=root_lb, root_ub=root_ub,
@@ -371,7 +488,7 @@ def lane_commit_tile(st: LaneState, pre: LanePrep, lb, ub, sweeps,
         depth=new_depth, next_sub=next_sub, fresh=fresh, done=done,
         incomplete=incomplete, best_obj=best_obj, best_sol=best_sol,
         has_sol=has_sol, n_nodes=n_nodes, n_fails=n_fails, n_sols=n_sols,
-        n_sweeps=n_sweeps)
+        n_sweeps=n_sweeps, dom=new_dom, root_dom=root_dom)
 
 
 def lanes_step(cm: CompiledModel, subs_lb, subs_ub, opts: SearchOptions,
@@ -389,14 +506,24 @@ def lanes_step(cm: CompiledModel, subs_lb, subs_ub, opts: SearchOptions,
     cursor is returned alongside the new lane state.
     """
     st, pool_head = dispatch_pool(st, pool_head, subs_lb.shape[0])
-    pre = lane_load_tile(subs_lb, subs_ub, st, gbest, obj_var=cm.obj_var)
+    pre = lane_load_tile(subs_lb, subs_ub, st, gbest, obj_var=cm.obj_var,
+                         dom_off=cm.dom_off, dom_track=cm.dom_track,
+                         n_words=cm.n_words)
     backend = get_backend(opts.backend, **dict(opts.backend_opts))
-    lb, ub, sweeps, converged = backend.fixpoint_batch(
-        cm, pre.lb, pre.ub, max_iters=opts.max_fixpoint_iters)
+    if pre.dom is not None:
+        lb, ub, dom, sweeps, converged = backend.fixpoint_batch(
+            cm, pre.lb, pre.ub, dom=pre.dom,
+            max_iters=opts.max_fixpoint_iters)
+    else:
+        dom = None
+        lb, ub, sweeps, converged = backend.fixpoint_batch(
+            cm, pre.lb, pre.ub, max_iters=opts.max_fixpoint_iters)
     st = lane_commit_tile(st, pre, lb, ub, sweeps, converged,
                           cm.branch_vars, obj_var=cm.obj_var,
                           var_strategy=opts.var_strategy,
-                          val_strategy=opts.val_strategy)
+                          val_strategy=opts.val_strategy,
+                          dom=dom, dom_off=cm.dom_off,
+                          dom_track=cm.dom_track)
     return st, pool_head
 
 

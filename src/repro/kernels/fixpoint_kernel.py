@@ -54,6 +54,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.compile import (alldiff_dense_tile_bytes,
                                 alldiff_sparse_tile_bytes,
+                                ct_tile_bytes,
                                 cumulative_dense_tile_bytes,
                                 cumulative_sparse_tile_bytes)
 from repro.core.fixpoint import fixpoint_tile
@@ -64,8 +65,9 @@ from repro.core import search as S
 # sweep intermediates explicitly instead of reserving a blanket margin.
 VMEM_LIMIT_BYTES = 16 * 1024 * 1024
 
-N_TABLES = 28        # positional args of fixpoint.sweep_tile, in order
-N_STATE = len(S.LaneState._fields)                                # 19
+N_TABLES = 35        # positional args of fixpoint.sweep_tile, in order
+# model_tables positions the search kernel reads back out (§17 banks)
+_I_DOM_OFF, _I_DOM_TRACK = 31, 32
 _BOOL_FIELDS = ("dec_flip", "fresh", "done", "incomplete", "has_sol")
 
 
@@ -121,8 +123,16 @@ def vmem_budget(cm, lane_tile: int, *, resident: bool = False,
             if cm.cu_layout == "sparse"
             else cumulative_dense_tile_bytes(cm.n_cumulative, T,
                                              cm.horizon, it))
+    if cm.n_table:
+        scratch += lane_tile * ct_tile_bytes(cm.n_table, cm.ct_arity,
+                                             cm.n_words, cm.ct_words)
 
     stores = 4 * lane_tile * V * it          # lb/ub in + out
+    if cm.n_table:
+        # the carried bitset store (dom in + out); middle_out on a pure
+        # bounds model also carries one, but that is V words/lane of
+        # headroom the budget's explicit-scratch margins absorb
+        stores += 2 * lane_tile * V * cm.n_words * 4
     state = 0
     if resident:
         tables += _nbytes(cm.branch_vars)
@@ -131,6 +141,8 @@ def vmem_budget(cm, lane_tile: int, *, resident: bool = False,
                       + 3 * lane_tile * max_depth * 4  # dec_var/val/flip
                       + 12 * lane_tile * 4)            # flags + counters
         state += 2 * pool_size * V * it                # broadcast EPS pool
+        if cm.n_table:
+            state += 2 * lane_tile * V * cm.n_words * 4   # root_dom in+out
     else:
         stores += 2 * lane_tile * 4                    # sweeps/conv out
     total = tables + stores + state + scratch
@@ -177,16 +189,31 @@ def fit_lane_tile(cm, lane_tile: int, n_lanes: int, *,
 # --------------------------------------------------------------------------
 
 def _fixpoint_kernel(*refs, max_sweeps: int, horizon: int, n_alldiff: int,
-                     n_cumulative: int, ad_layout: str, cu_layout: str):
+                     n_cumulative: int, ad_layout: str, cu_layout: str,
+                     n_table: int, n_words: int, have_dom: bool):
     table_refs = refs[:N_TABLES]
-    lb_ref, ub_ref = refs[N_TABLES], refs[N_TABLES + 1]
-    out_lb_ref, out_ub_ref, sweeps_ref, conv_ref = refs[N_TABLES + 2:]
+    k = N_TABLES
+    lb_ref, ub_ref = refs[k], refs[k + 1]
+    dom_ref = refs[k + 2] if have_dom else None
+    outs = refs[k + 2 + int(have_dom):]
     tables = tuple(r[...] for r in table_refs)
-    lb, ub, sweeps, conv = fixpoint_tile(
-        lb_ref[...], ub_ref[...], *tables, horizon=horizon,
-        n_alldiff=n_alldiff, n_cumulative=n_cumulative,
-        ad_layout=ad_layout, cu_layout=cu_layout,
-        max_iters=max_sweeps)
+    if have_dom:
+        out_lb_ref, out_ub_ref, out_dom_ref, sweeps_ref, conv_ref = outs
+        lb, ub, dom, sweeps, conv = fixpoint_tile(
+            lb_ref[...], ub_ref[...], *tables, horizon=horizon,
+            n_alldiff=n_alldiff, n_cumulative=n_cumulative,
+            ad_layout=ad_layout, cu_layout=cu_layout,
+            n_table=n_table, n_words=n_words, dom=dom_ref[...],
+            max_iters=max_sweeps)
+        out_dom_ref[...] = dom
+    else:
+        out_lb_ref, out_ub_ref, sweeps_ref, conv_ref = outs
+        lb, ub, sweeps, conv = fixpoint_tile(
+            lb_ref[...], ub_ref[...], *tables, horizon=horizon,
+            n_alldiff=n_alldiff, n_cumulative=n_cumulative,
+            ad_layout=ad_layout, cu_layout=cu_layout,
+            n_table=n_table, n_words=n_words,
+            max_iters=max_sweeps)
     out_lb_ref[...] = lb
     out_ub_ref[...] = ub
     sweeps_ref[...] = sweeps
@@ -204,6 +231,8 @@ def _table_specs(cm):
     Dcu = cm.cu_occ_inst.shape[1]
     V = cm.n_vars
     Mad, Mcu = cm.ad_packed, cm.cu_packed
+    T1, R, K32, TW = cm.ct_supp.shape
+    Dct = cm.ct_occ_inst.shape[1]
     return [
         whole(P1, K), whole(P1, K), whole(P1), whole(P1),
         whole(V, D), whole(V, D),
@@ -213,11 +242,13 @@ def _table_specs(cm):
         whole(C1, T), whole(C1, T), whole(C1, T), whole(C1),
         whole(V, Dcu), whole(V, Dcu),
         whole(C1 + 1), whole(Mcu), whole(Mcu), whole(Mcu), whole(Mcu),
+        whole(T1, R), whole(T1, R), whole(T1, R, K32, TW),
+        whole(V, Dct), whole(V, Dct), whole(V), whole(V),
         whole(V), whole(V),
     ]
 
 
-def fixpoint_pallas(cm, lb, ub, *, lane_tile: int = 8,
+def fixpoint_pallas(cm, lb, ub, dom=None, *, lane_tile: int = 8,
                     max_sweeps: int = 16384, interpret: bool = True):
     """Run the VMEM fixpoint kernel over lane-batched stores [L, V].
 
@@ -226,7 +257,9 @@ def fixpoint_pallas(cm, lb, ub, *, lane_tile: int = 8,
     sweep counts and convergence flags are bit-identical to the XLA
     backends.  The tile auto-shrinks (with a warning) when the
     `vmem_budget` exceeds VMEM.  Returns (lb', ub', sweeps[L],
-    converged[L]).
+    converged[L]); with `dom` (the ``[L, V, W]`` bitset store, DESIGN.md
+    §17) it rides in VMEM next to the interval stores and the return
+    gains dom' before the counters.
     """
     from repro.core.fixpoint import model_tables
     L, V = lb.shape
@@ -235,29 +268,46 @@ def fixpoint_pallas(cm, lb, ub, *, lane_tile: int = 8,
     if pad:
         lb = jnp.concatenate([lb, jnp.broadcast_to(lb[-1:], (pad, V))])
         ub = jnp.concatenate([ub, jnp.broadcast_to(ub[-1:], (pad, V))])
+        if dom is not None:
+            dom = jnp.concatenate(
+                [dom, jnp.broadcast_to(dom[-1:], (pad,) + dom.shape[1:])])
     Lp = lb.shape[0]
     grid = (Lp // lane_tile,)
 
     dt = cm.jdtype
     tiled = pl.BlockSpec((lane_tile, V), lambda i: (i, 0))
     lane1d = pl.BlockSpec((lane_tile,), lambda i: (i,))
+    have_dom = dom is not None
+    W = dom.shape[-1] if have_dom else 0
+    tiled3 = (pl.BlockSpec((lane_tile, V, W), lambda i: (i, 0, 0))
+              if have_dom else None)
 
-    out_lb, out_ub, sweeps, conv = pl.pallas_call(
+    outs = pl.pallas_call(
         functools.partial(_fixpoint_kernel, max_sweeps=max_sweeps,
                           horizon=cm.horizon, n_alldiff=cm.n_alldiff,
                           n_cumulative=cm.n_cumulative,
-                          ad_layout=cm.ad_layout, cu_layout=cm.cu_layout),
+                          ad_layout=cm.ad_layout, cu_layout=cm.cu_layout,
+                          n_table=cm.n_table, n_words=cm.n_words,
+                          have_dom=have_dom),
         grid=grid,
-        in_specs=_table_specs(cm) + [tiled, tiled],
-        out_specs=[tiled, tiled, lane1d, lane1d],
-        out_shape=[
-            jax.ShapeDtypeStruct((Lp, V), dt),
-            jax.ShapeDtypeStruct((Lp, V), dt),
-            jax.ShapeDtypeStruct((Lp,), jnp.int32),
-            jax.ShapeDtypeStruct((Lp,), jnp.int32),
-        ],
+        in_specs=(_table_specs(cm) + [tiled, tiled]
+                  + ([tiled3] if have_dom else [])),
+        out_specs=([tiled, tiled] + ([tiled3] if have_dom else [])
+                   + [lane1d, lane1d]),
+        out_shape=(
+            [jax.ShapeDtypeStruct((Lp, V), dt),
+             jax.ShapeDtypeStruct((Lp, V), dt)]
+            + ([jax.ShapeDtypeStruct((Lp, V, W), jnp.uint32)]
+               if have_dom else [])
+            + [jax.ShapeDtypeStruct((Lp,), jnp.int32),
+               jax.ShapeDtypeStruct((Lp,), jnp.int32)]),
         interpret=interpret,
-    )(*model_tables(cm), lb, ub)
+    )(*model_tables(cm), lb, ub, *([dom] if have_dom else []))
+    if have_dom:
+        out_lb, out_ub, out_dom, sweeps, conv = outs
+        return (out_lb[:L], out_ub[:L], out_dom[:L], sweeps[:L],
+                conv[:L].astype(bool))
+    out_lb, out_ub, sweeps, conv = outs
     return out_lb[:L], out_ub[:L], sweeps[:L], conv[:L].astype(bool)
 
 
@@ -265,23 +315,32 @@ def fixpoint_pallas(cm, lb, ub, *, lane_tile: int = 8,
 # Resident search megakernel (K supersteps per launch, DESIGN.md §13)
 # --------------------------------------------------------------------------
 
+def _state_fields(st: S.LaneState):
+    """The LaneState fields this state actually carries (the bitset
+    stores are None on bounds-only models — skipped, so the kernel ref
+    layout matches the pytree exactly)."""
+    return tuple(f for f in S.LaneState._fields
+                 if getattr(st, f) is not None)
+
+
 def _pack_state(st: S.LaneState):
     """LaneState → kernel I/O arrays (bools as int32, field order)."""
     return tuple(
         getattr(st, f).astype(jnp.int32) if f in _BOOL_FIELDS
         else getattr(st, f)
-        for f in S.LaneState._fields)
+        for f in _state_fields(st))
 
 
-def _unpack_state(arrays) -> S.LaneState:
-    return S.LaneState(*(
-        a != 0 if f in _BOOL_FIELDS else a
-        for f, a in zip(S.LaneState._fields, arrays)))
+def _unpack_state(arrays, fields) -> S.LaneState:
+    return S.LaneState(**{
+        f: (a != 0 if f in _BOOL_FIELDS else a)
+        for f, a in zip(fields, arrays)})
 
 
 def _search_kernel(*refs, supersteps: int, max_sweeps: int, horizon: int,
                    n_alldiff: int, n_cumulative: int, ad_layout: str,
-                   cu_layout: str, obj_var: int,
+                   cu_layout: str, n_table: int, n_words: int,
+                   state_fields: tuple, obj_var: int,
                    var_strategy: str, val_strategy: str,
                    stop_on_first: bool, max_fixpoint_iters, n_tiles: int):
     """K fused supersteps over one VMEM-resident lane tile.
@@ -295,15 +354,19 @@ def _search_kernel(*refs, supersteps: int, max_sweeps: int, horizon: int,
     keeping the launch idempotent).
     """
     k = N_TABLES
+    n_state = len(state_fields)
     tables = tuple(r[...] for r in refs[:k])
+    dom_off = tables[_I_DOM_OFF]
+    dom_track = tables[_I_DOM_TRACK]
     bv = refs[k][...]
     subs_lb = refs[k + 1][...]
     subs_ub = refs[k + 2][...]
-    st = _unpack_state([r[...] for r in refs[k + 3:k + 3 + N_STATE]])
-    gbest_ref, it_ref, head_ref = refs[k + 3 + N_STATE:k + 6 + N_STATE]
-    outs = refs[k + 6 + N_STATE:]
-    out_state = outs[:N_STATE]
-    out_gbest_ref, out_head_ref, out_it_ref, out_stop_ref = outs[N_STATE:]
+    st = _unpack_state([r[...] for r in refs[k + 3:k + 3 + n_state]],
+                       state_fields)
+    gbest_ref, it_ref, head_ref = refs[k + 3 + n_state:k + 6 + n_state]
+    outs = refs[k + 6 + n_state:]
+    out_state = outs[:n_state]
+    out_gbest_ref, out_head_ref, out_it_ref, out_stop_ref = outs[n_state:]
 
     gbest = gbest_ref[0]
     it = it_ref[0]
@@ -327,16 +390,29 @@ def _search_kernel(*refs, supersteps: int, max_sweeps: int, horizon: int,
                                             tile_id=tile_id,
                                             n_tiles=n_tiles)
             pre = S.lane_load_tile(subs_lb, subs_ub, st, gbest,
-                                   obj_var=obj_var)
-            lb, ub, sweeps, conv = fixpoint_tile(
-                pre.lb, pre.ub, *tables, horizon=horizon,
-                n_alldiff=n_alldiff, n_cumulative=n_cumulative,
-                ad_layout=ad_layout, cu_layout=cu_layout,
-                max_iters=cap)
+                                   obj_var=obj_var, dom_off=dom_off,
+                                   dom_track=dom_track, n_words=n_words)
+            if pre.dom is not None:
+                lb, ub, dm, sweeps, conv = fixpoint_tile(
+                    pre.lb, pre.ub, *tables, horizon=horizon,
+                    n_alldiff=n_alldiff, n_cumulative=n_cumulative,
+                    ad_layout=ad_layout, cu_layout=cu_layout,
+                    n_table=n_table, n_words=n_words, dom=pre.dom,
+                    max_iters=cap)
+            else:
+                dm = None
+                lb, ub, sweeps, conv = fixpoint_tile(
+                    pre.lb, pre.ub, *tables, horizon=horizon,
+                    n_alldiff=n_alldiff, n_cumulative=n_cumulative,
+                    ad_layout=ad_layout, cu_layout=cu_layout,
+                    n_table=n_table, n_words=n_words,
+                    max_iters=cap)
             st = S.lane_commit_tile(st, pre, lb, ub, sweeps, conv, bv,
                                     obj_var=obj_var,
                                     var_strategy=var_strategy,
-                                    val_strategy=val_strategy)
+                                    val_strategy=val_strategy,
+                                    dom=dm, dom_off=dom_off,
+                                    dom_track=dom_track)
             gbest = jnp.minimum(gbest, jnp.min(st.best_obj))
             return st, gbest, it + 1, head
 
@@ -363,9 +439,9 @@ def _pad_lanes(st: S.LaneState, pad: int, dt) -> S.LaneState:
         return jnp.concatenate([a, tail])
 
     fills = dict(next_sub=S.UNASSIGNED, done=True, best_obj=big)
-    return S.LaneState(*(
-        ext(getattr(st, f), fills.get(f, 0))
-        for f in S.LaneState._fields))
+    return S.LaneState(**{
+        f: ext(getattr(st, f), fills.get(f, 0))
+        for f in _state_fields(st)})
 
 
 def search_pallas(cm, subs_lb, subs_ub, st: S.LaneState, gbest, it,
@@ -415,6 +491,9 @@ def search_pallas(cm, subs_lb, subs_ub, st: S.LaneState, gbest, it,
 
     def state_spec(f):
         a = getattr(st, f)
+        if a.ndim == 3:
+            return pl.BlockSpec((tile,) + a.shape[1:],
+                                lambda i: (i, 0, 0))
         if a.ndim == 2:
             return pl.BlockSpec((tile, a.shape[1]), lambda i: (i, 0))
         return pl.BlockSpec((tile,), lambda i: (i,))
@@ -424,7 +503,8 @@ def search_pallas(cm, subs_lb, subs_ub, st: S.LaneState, gbest, it,
         d = jnp.int32 if a.dtype == jnp.bool_ else a.dtype
         return jax.ShapeDtypeStruct(a.shape, d)
 
-    fields = S.LaneState._fields
+    fields = _state_fields(st)
+    n_state = len(fields)
     in_specs = (_table_specs(cm)
                 + [whole(int(cm.branch_vars.shape[0])),
                    whole(Spool, V), whole(Spool, V)]
@@ -442,7 +522,8 @@ def search_pallas(cm, subs_lb, subs_ub, st: S.LaneState, gbest, it,
             _search_kernel, supersteps=supersteps, max_sweeps=max_sweeps,
             horizon=cm.horizon, n_alldiff=cm.n_alldiff,
             n_cumulative=cm.n_cumulative, ad_layout=cm.ad_layout,
-            cu_layout=cm.cu_layout, obj_var=cm.obj_var,
+            cu_layout=cm.cu_layout, n_table=cm.n_table,
+            n_words=cm.n_words, state_fields=fields, obj_var=cm.obj_var,
             var_strategy=var_strategy, val_strategy=val_strategy,
             stop_on_first=stop_on_first,
             max_fixpoint_iters=max_fixpoint_iters, n_tiles=n_tiles),
@@ -455,9 +536,10 @@ def search_pallas(cm, subs_lb, subs_ub, st: S.LaneState, gbest, it,
       jnp.reshape(jnp.asarray(it, jnp.int32), (1,)),
       pool_head)
 
-    st_out = _unpack_state(outs[:N_STATE])
+    st_out = _unpack_state(outs[:n_state], fields)
     if pad:
-        st_out = S.LaneState(*(a[:L] for a in st_out))
-    gbest_out, head_out, it_out, stop_out = outs[N_STATE:]
+        st_out = S.LaneState(**{
+            f: getattr(st_out, f)[:L] for f in fields})
+    gbest_out, head_out, it_out, stop_out = outs[n_state:]
     return (st_out, jnp.min(gbest_out), jnp.max(it_out),
             head_out.astype(jnp.int32), jnp.all(stop_out != 0))

@@ -63,6 +63,13 @@ def main():
     ap.add_argument("--supersteps-per-launch", type=int, default=None,
                     help="pallas_resident: K supersteps fused per "
                          "megakernel launch (DESIGN.md §13; default 16)")
+    ap.add_argument("--branch-value", default=None,
+                    choices=("min", "split", "middle_out"),
+                    help="value branching (DESIGN.md §17): min = x≤lb, "
+                         "split = bisect at the midpoint, middle_out = "
+                         "x=m | x≠m on the bitset-domain value nearest "
+                         "the midpoint (needs no tables — the bitset "
+                         "store is carried automatically)")
     ap.add_argument("--mesh", type=int, default=None, metavar="N",
                     help="distributed EPS (core/dist_solve.py, DESIGN.md "
                          "§14): shard the lane pool over N devices with "
@@ -96,6 +103,9 @@ def main():
     bo = {}
     if args.lane_tile is not None and args.backend.startswith("pallas"):
         bo["lane_tile"] = args.lane_tile
+    extra = {}
+    if args.branch_value is not None:
+        extra["val_strategy"] = args.branch_value
     cfg = solver.SolveConfig.preset(
         _PRESETS[args.preset],
         n_lanes=args.lanes,
@@ -104,7 +114,7 @@ def main():
         timeout_s=args.timeout, backend=args.backend,
         backend_opts=tuple(sorted(bo.items())),
         supersteps_per_launch=args.supersteps_per_launch,
-        mesh_shards=args.mesh)
+        mesh_shards=args.mesh, **extra)
 
     if args.dryrun:
         from repro.launch.mesh import make_production_mesh

@@ -1,0 +1,260 @@
+"""Property tests for the bitset finite-domain lattice (DESIGN.md §17).
+
+The word-level primitives `core/bitset.py` builds Compact-Table and
+middle-out branching on — SWAR popcount/ctz/clz, the join/meet lattice
+contract, and the `from_bounds`/`to_bounds` interval bridges (a Galois
+connection with the bounds lattice) — checked on randomized words and
+domains.  Follows the two-driver pattern of tests/test_lattice_props.py:
+seeded-numpy always, `hypothesis` on top when installed.  Every law is
+checked simultaneously on the jnp primitives and their np_ host mirrors
+(the sequential baseline must see the *same* lattice).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bitset as B
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
+
+SEEDS = [0, 1, 2, 3, 4]
+
+
+def _words(seed: int, shape=(64,)):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(0, 2 ** 32, size=shape, dtype=np.uint64)
+    # mix in the adversarial corner words
+    corners = np.array([0, 1, 0x80000000, 0xFFFFFFFF, 0xAAAAAAAA,
+                        0x55555555, 0x7FFFFFFF, 0xFFFE0001],
+                       dtype=np.uint64)
+    w.flat[:corners.size] = corners[:min(corners.size, w.size)]
+    return w.astype(np.uint32)
+
+
+def _doms(seed: int, n_vars=16, n_words=2):
+    rng = np.random.default_rng(seed)
+    dom = rng.integers(0, 2 ** 32, size=(n_vars, n_words),
+                       dtype=np.uint64).astype(np.uint32)
+    dom[0] = 0                                    # one empty domain
+    dom[1] = B.FULL                               # one full domain
+    mask = rng.random((n_vars, n_words)) < 0.3    # some sparse ones
+    dom[2:] &= np.where(mask[2:], np.uint32(0x01010101), B.FULL)
+    return dom
+
+
+# ---------------------------------------------------------------------------
+# property functions (shared by both drivers)
+# ---------------------------------------------------------------------------
+
+
+def check_swar_vs_reference(w):
+    """popcount/ctz/clz against int.bit_count-style python references,
+    jnp and np mirrors in lockstep."""
+    ref_pop = np.array([bin(int(x)).count("1") for x in w], np.uint32)
+    ref_ctz = np.array(
+        [32 if x == 0 else (int(x) & -int(x)).bit_length() - 1 for x in w],
+        np.uint32)
+    ref_clz = np.array([32 - int(x).bit_length() for x in w], np.uint32)
+    np.testing.assert_array_equal(np.asarray(B.popcount(jnp.asarray(w))),
+                                  ref_pop)
+    np.testing.assert_array_equal(np.asarray(B.np_popcount(w)), ref_pop)
+    np.testing.assert_array_equal(np.asarray(B.ctz(jnp.asarray(w))), ref_ctz)
+    np.testing.assert_array_equal(np.asarray(B.clz(jnp.asarray(w))), ref_clz)
+
+
+def check_join_semilattice(a, b, c):
+    """⊔ = AND is ACI, ⊓ = OR is its dual; absorption ties them."""
+    ja, jb, jc = (jnp.asarray(x) for x in (a, b, c))
+    np.testing.assert_array_equal(np.asarray(B.join(ja, jb)),
+                                  np.asarray(B.join(jb, ja)))
+    np.testing.assert_array_equal(
+        np.asarray(B.join(B.join(ja, jb), jc)),
+        np.asarray(B.join(ja, B.join(jb, jc))))
+    np.testing.assert_array_equal(np.asarray(B.join(ja, ja)), a)
+    np.testing.assert_array_equal(
+        np.asarray(B.join(ja, B.meet(ja, jb))), a)      # absorption
+    np.testing.assert_array_equal(
+        np.asarray(B.meet(ja, B.join(ja, jb))), a)
+    # join refines both arguments in information order (a ≤ a⊔b)
+    j = B.join(ja, jb)
+    assert bool(np.asarray(B.leq(ja, j)).all())
+    assert bool(np.asarray(B.leq(jb, j)).all())
+
+
+def check_count_and_empty(dom):
+    ref = np.array([sum(bin(int(w)).count("1") for w in row)
+                    for row in dom], np.uint32)
+    np.testing.assert_array_equal(np.asarray(B.count(jnp.asarray(dom))), ref)
+    np.testing.assert_array_equal(np.asarray(B.np_count(dom)), ref)
+    np.testing.assert_array_equal(np.asarray(B.is_empty(jnp.asarray(dom))),
+                                  ref == 0)
+    np.testing.assert_array_equal(np.asarray(B.np_is_empty(dom)), ref == 0)
+
+
+def check_bounds_roundtrip(lb, ub, off, n_words):
+    """from_bounds/to_bounds form a Galois connection with the interval
+    lattice: to_bounds(from_bounds(l, u)) == (l, u) exactly for
+    non-empty in-range intervals, and an empty interval packs to the
+    all-zero (failed) domain whose hull crosses itself."""
+    dom = np.asarray(B.from_bounds(jnp.asarray(lb), jnp.asarray(ub),
+                                   jnp.asarray(off), n_words))
+    np.testing.assert_array_equal(
+        dom, B.np_from_bounds(lb, ub, off, n_words))
+    lo, hi = B.to_bounds(jnp.asarray(dom), jnp.asarray(off))
+    nlo, nhi = B.np_to_bounds(dom, off)
+    np.testing.assert_array_equal(np.asarray(lo), nlo)
+    np.testing.assert_array_equal(np.asarray(hi), nhi)
+    nonempty = lb <= ub
+    np.testing.assert_array_equal(nlo[nonempty], lb[nonempty])
+    np.testing.assert_array_equal(nhi[nonempty], ub[nonempty])
+    assert (dom[~nonempty] == 0).all()
+    assert (nlo[~nonempty] > nhi[~nonempty]).all()
+    # membership agrees with the interval on every in-range value
+    for v in range(int(off.min()), int(off.min()) + 32 * n_words):
+        val = np.full(lb.shape, v)
+        want = (lb <= v) & (v <= ub) & (v - off >= 0) & \
+               (v - off < 32 * n_words)
+        got = np.asarray(B.has_value(jnp.asarray(dom), jnp.asarray(val),
+                                     jnp.asarray(off)))
+        np.testing.assert_array_equal(got, want)
+        np.testing.assert_array_equal(B.np_has_value(dom, val, off), want)
+
+
+def check_hull_vs_enumeration(dom, off):
+    """min/max_value equal the enumerated extremes of the set bits."""
+    lo, hi = B.to_bounds(jnp.asarray(dom), jnp.asarray(off))
+    lo, hi = np.asarray(lo), np.asarray(hi)
+    W = dom.shape[-1]
+    for v in range(dom.shape[0]):
+        bits = [32 * w + k for w in range(W) for k in range(32)
+                if (int(dom[v, w]) >> k) & 1]
+        if bits:
+            assert lo[v] == off[v] + min(bits)
+            assert hi[v] == off[v] + max(bits)
+        else:
+            assert lo[v] == off[v] + 32 * W and hi[v] == off[v] - 1
+
+
+def check_clear_value(dom, off):
+    """np_clear_value removes exactly one membership and is the x ≠ v
+    branching tell: monotone (information only grows)."""
+    rng = np.random.default_rng(int(dom[2:].sum()) % (2 ** 31))
+    vals = off + rng.integers(-4, 32 * dom.shape[-1] + 4, size=dom.shape[0])
+    out = B.np_clear_value(dom, vals, off)
+    assert not B.np_has_value(out, vals, off).any()
+    # only the targeted bit may differ
+    diff = dom ^ out
+    assert (B.np_popcount(diff).sum(axis=-1) <= 1).all()
+    in_range = (vals - off >= 0) & (vals - off < 32 * dom.shape[-1])
+    had = B.np_has_value(dom, vals, off)
+    np.testing.assert_array_equal(B.np_popcount(diff).sum(axis=-1) == 1,
+                                  had & in_range)
+
+
+def check_low_mask():
+    ns = jnp.arange(-3, 36)
+    got = np.asarray(B.low_mask(ns))
+    want = np.array([(1 << min(max(int(n), 0), 32)) - 1 for n in ns],
+                    dtype=np.uint64).astype(np.uint32)
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# seeded-numpy driver (always runs)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_swar_primitives_seeded(seed):
+    check_swar_vs_reference(_words(seed))
+
+
+def test_low_mask_edges():
+    check_low_mask()
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_join_semilattice_seeded(seed):
+    a, b, c = _words(seed), _words(seed + 100), _words(seed + 200)
+    check_join_semilattice(a, b, c)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_count_and_empty_seeded(seed):
+    check_count_and_empty(_doms(seed))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("n_words", [1, 2, 3])
+def test_bounds_roundtrip_seeded(seed, n_words):
+    rng = np.random.default_rng(seed)
+    n = 24
+    off = rng.integers(-50, 50, size=n)
+    lb = off + rng.integers(-2, 32 * n_words + 2, size=n)
+    ub = lb + rng.integers(-3, 32 * n_words, size=n)
+    lb = np.clip(lb, off, off + 32 * n_words - 1)
+    ub = np.clip(ub, off - 1, off + 32 * n_words - 1)
+    check_bounds_roundtrip(lb, ub, off, n_words)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_hull_and_clear_seeded(seed):
+    dom = _doms(seed, n_vars=12, n_words=2)
+    off = np.random.default_rng(seed + 7).integers(-30, 30, size=12)
+    check_hull_vs_enumeration(dom, off)
+    check_clear_value(dom, off)
+
+
+def test_from_bounds_track_pins_full():
+    lb = np.array([3, 3])
+    ub = np.array([5, 5])
+    off = np.array([0, 0])
+    track = np.array([1, 0])
+    dom = np.asarray(B.from_bounds(jnp.asarray(lb), jnp.asarray(ub),
+                                   jnp.asarray(off), 2,
+                                   track=jnp.asarray(track)))
+    assert dom[0, 0] == 0b111000 and dom[0, 1] == 0
+    assert (dom[1] == B.FULL).all()
+    np.testing.assert_array_equal(
+        dom, B.np_from_bounds(lb, ub, off, 2, track=track))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis driver (richer shrinking search; skipped when not installed)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    word = st.integers(min_value=0, max_value=2 ** 32 - 1)
+
+    @st.composite
+    def word_arrays(draw, n=8):
+        return np.array([draw(word) for _ in range(n)],
+                        dtype=np.uint64).astype(np.uint32)
+
+    @settings(deadline=None, max_examples=40)
+    @given(word_arrays(), word_arrays(), word_arrays())
+    def test_bitset_laws_hypothesis(a, b, c):
+        check_swar_vs_reference(a)
+        check_join_semilattice(a, b, c)
+
+    @settings(deadline=None, max_examples=20)
+    @given(st.integers(min_value=0, max_value=2 ** 16),
+           st.integers(min_value=1, max_value=3))
+    def test_bounds_roundtrip_hypothesis(seed, n_words):
+        rng = np.random.default_rng(seed)
+        off = rng.integers(-50, 50, size=8)
+        lb = off + rng.integers(-2, 32 * n_words + 2, size=8)
+        ub = lb + rng.integers(-3, 32 * n_words, size=8)
+        lb = np.clip(lb, off, off + 32 * n_words - 1)
+        ub = np.clip(ub, off - 1, off + 32 * n_words - 1)
+        check_bounds_roundtrip(lb, ub, off, n_words)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed; seeded fallback "
+                             "drivers above cover the same properties")
+    def test_bitset_laws_hypothesis():
+        pass

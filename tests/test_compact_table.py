@@ -1,0 +1,373 @@
+"""Compact-Table extensional propagation (DESIGN.md §17).
+
+Four layers of guarantees for the bitset subsystem + CT propagator kind:
+
+* **unit semantics** — support filtering on hand-checked chains
+  (including hole pruning no bounds propagator can see), wipeout
+  failure, `Model.table` validation (arity, out-of-domain tuples, the
+  empty table);
+* **per-sweep bit-parity** — `sweep_batch` (gather) and
+  `sweep_scatter_batch` produce bit-identical `(lb, ub, dom)` after
+  EVERY sweep, and the fused resident megakernel reproduces K unfused
+  `lanes_step` supersteps field-for-field (dom included) on a table
+  model under middle-out branching;
+* **parity oracles** — native CT vs the ``decompose=True`` reified
+  disjunction, the sequential baseline (its own numpy transcription),
+  and all four backends prove the same status/objective on the new zoo
+  models, ground-checked;
+* **statics** — `shape_signature` separates table layouts; the VMEM
+  budget grows by the CT scratch + bitset stores.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import solver
+from repro.core import api, baseline, eps, models as zoo, search as S
+from repro.core import bitset as B
+from repro.core import fixpoint as F
+from repro.core.backend import get_backend
+from repro.core.model import Model
+from repro.kernels import fixpoint_kernel as FK
+
+SMALL = dict(n_lanes=8, eps_target=16, timeout_s=300.0, max_depth=256)
+
+
+def _chain_model():
+    """x,y,z ∈ (0,4), table(x,y) ∘ table(y,z), x ≥ 1 — the hand-checked
+    fixpoint is x∈[1,3], y∈[2,4], z∈[1,2]."""
+    m = Model("ct-chain")
+    x = m.int_var(0, 4, "x")
+    y = m.int_var(0, 4, "y")
+    z = m.int_var(0, 4, "z")
+    m.table([x, y], [(0, 1), (1, 2), (3, 4), (4, 0)])
+    m.table([y, z], [(1, 3), (2, 2), (4, 1)])
+    m.add(x >= 1)
+    m.minimize(x)
+    m.branch_on([x, y, z])
+    return m.compile(), (x, y, z)
+
+
+def _mixed_ct_model(decompose=False):
+    """Tables + a linear objective coupling — every bank in one model."""
+    m = Model("ct-mixed")
+    xs = [m.int_var(0, 5, f"x{i}") for i in range(4)]
+    m.table(xs, [(0, 1, 2, 3), (1, 2, 3, 4), (2, 3, 4, 5),
+                 (5, 4, 3, 2), (0, 2, 4, 1)], decompose=decompose)
+    m.table([xs[0], xs[3]], [(0, 3), (2, 3), (5, 2), (1, 4)],
+            decompose=decompose)
+    obj = m.int_var(0, 30, "obj")
+    for c in (xs[0] * 3 + xs[1]).eq(obj):
+        m.add(c)
+    m.minimize(obj)
+    m.branch_on(xs)
+    return m.compile()
+
+
+# --------------------------------------------------------------------------
+# unit semantics
+# --------------------------------------------------------------------------
+
+def test_ct_chain_filters_to_hand_checked_hull():
+    cm, (x, y, z) = _chain_model()
+    lb0, ub0 = jnp.asarray(cm.lb0)[None], jnp.asarray(cm.ub0)[None]
+    dom0 = B.from_bounds(lb0, ub0, jnp.asarray(cm.dom_off), cm.n_words,
+                         track=jnp.asarray(cm.dom_track))
+    nlb, nub, dom, _, conv = F.fixpoint_batch(cm, lb0, ub0, dom0)
+    assert bool(conv[0])
+    idx = [x.idx, y.idx, z.idx]
+    np.testing.assert_array_equal(np.asarray(nlb)[0, idx], [1, 2, 1])
+    np.testing.assert_array_equal(np.asarray(nub)[0, idx], [3, 4, 2])
+
+
+def test_ct_prunes_holes_bounds_cannot_see():
+    """dom carries holes across constraints: with x restricted to the
+    supported {1, 3} (a hull no bounds propagator can shrink), the
+    second table sees the hole at x=2 and drops y=5."""
+    m = Model("ct-holes")
+    x = m.int_var(0, 4, "x")
+    y = m.int_var(0, 9, "y")
+    m.table([x], [(1,), (3,)])
+    m.table([x, y], [(1, 0), (2, 5), (3, 7)])
+    m.minimize(y)
+    m.branch_on([x, y])
+    cm = m.compile()
+    dom0 = B.from_bounds(jnp.asarray(cm.lb0)[None],
+                         jnp.asarray(cm.ub0)[None],
+                         jnp.asarray(cm.dom_off), cm.n_words,
+                         track=jnp.asarray(cm.dom_track))
+    nlb, nub, dom, _, conv = F.fixpoint_batch(
+        cm, jnp.asarray(cm.lb0)[None], jnp.asarray(cm.ub0)[None], dom0)
+    assert bool(conv[0])
+    # bounds alone would keep x∈[1,3] hence y up to 7 *with* y=5 alive;
+    # the bitset knows x=2 is gone, so y ∈ {0, 7}
+    assert not bool(np.asarray(
+        B.has_value(dom[:, y.idx], jnp.asarray([5]),
+                    jnp.asarray(cm.dom_off)[y.idx][None]))[0])
+    assert int(np.asarray(nlb)[0, y.idx]) == 0
+    assert int(np.asarray(nub)[0, y.idx]) == 7
+
+
+def test_ct_wipeout_fails():
+    m = Model("ct-wipe")
+    x = m.int_var(0, 3, "x")
+    y = m.int_var(0, 3, "y")
+    m.table([x, y], [(0, 1), (1, 2)])
+    m.table([x, y], [(2, 3), (3, 0)])
+    m.branch_on([x, y])
+    cm = m.compile()
+    lb, ub, _, _ = F.fixpoint(cm, cm.lb0, cm.ub0)
+    assert bool((np.asarray(lb) > np.asarray(ub)).any())
+
+
+def test_table_validation():
+    m = Model("ct-bad")
+    x = m.int_var(0, 3, "x")
+    y = m.int_var(0, 3, "y")
+    with pytest.raises(ValueError, match="arity"):
+        m.table([x, y], [(1, 2, 3)])
+    # out-of-domain tuples are dropped; an empty table is trivially false
+    m2 = Model("ct-empty")
+    a = m2.int_var(0, 3, "a")
+    b = m2.int_var(0, 3, "b")
+    m2.table([a, b], [(9, 9), (-1, 2)])
+    m2.branch_on([a, b])
+    cm = m2.compile()
+    res = solver.Solver(solver.SolveConfig.preset("prove", **SMALL)) \
+        .solve(cm)
+    assert res.status == solver.UNSAT
+
+
+# --------------------------------------------------------------------------
+# per-sweep bit-parity
+# --------------------------------------------------------------------------
+
+def test_gather_scatter_bit_identical_per_sweep():
+    """Every individual sweep — not just the fixpoint — produces the
+    same (lb, ub, dom) words from the gather and scatter strategies."""
+    cm = _mixed_ct_model()
+    rng = np.random.default_rng(3)
+    V, L = cm.n_vars, 6
+    lbs = np.tile(np.asarray(cm.lb0), (L, 1))
+    ubs = np.tile(np.asarray(cm.ub0), (L, 1))
+    for i in range(1, L):
+        for _ in range(2):
+            v = int(rng.integers(0, 4))
+            lbs[i, v] = rng.integers(lbs[i, v], ubs[i, v] + 1)
+    gl = sl = jnp.asarray(lbs)
+    gu = su = jnp.asarray(ubs)
+    gd = sd = B.from_bounds(gl, gu, jnp.asarray(cm.dom_off), cm.n_words,
+                            track=jnp.asarray(cm.dom_track))
+    for sweep in range(6):
+        gl, gu, gd = F.sweep_batch(cm, gl, gu, gd)
+        sl, su, sd = F.sweep_scatter_batch(cm, sl, su, sd)
+        np.testing.assert_array_equal(np.asarray(gl), np.asarray(sl),
+                                      err_msg=f"lb sweep {sweep}")
+        np.testing.assert_array_equal(np.asarray(gu), np.asarray(su),
+                                      err_msg=f"ub sweep {sweep}")
+        np.testing.assert_array_equal(np.asarray(gd), np.asarray(sd),
+                                      err_msg=f"dom sweep {sweep}")
+
+
+def test_backend_fixpoint_parity_with_dom():
+    """gather / scatter / pallas land on bit-identical (lb, ub, dom)
+    fixpoints on table stores (equal failed masks)."""
+    cm = _mixed_ct_model()
+    L = 5
+    lbs = np.tile(np.asarray(cm.lb0), (L, 1))
+    ubs = np.tile(np.asarray(cm.ub0), (L, 1))
+    lbs[1, 0] = 3                      # forces table filtering
+    ubs[2, 1] = 2
+    lbs[3, 0] = 5
+    ubs[3, 3] = 1                      # infeasible with the second table
+    lbs, ubs = jnp.asarray(lbs), jnp.asarray(ubs)
+    dom = B.from_bounds(lbs, ubs, jnp.asarray(cm.dom_off), cm.n_words,
+                        track=jnp.asarray(cm.dom_track))
+    rl, ru, rd, _, rc = get_backend("gather").fixpoint_batch(
+        cm, lbs, ubs, dom=dom)
+    rl, ru = np.asarray(rl), np.asarray(ru)
+    failed = (rl > ru).any(axis=1)
+    assert failed[3] and not failed[0]
+    assert bool(np.asarray(rc).all())
+    for name in ("scatter", "pallas"):
+        be = get_backend(name, **(dict(lane_tile=4) if name == "pallas"
+                                  else {}))
+        al, au, ad, _, conv = be.fixpoint_batch(cm, lbs, ubs, dom=dom)
+        al, au = np.asarray(al), np.asarray(au)
+        np.testing.assert_array_equal(failed, (al > au).any(axis=1),
+                                      err_msg=f"failed mask: {name}")
+        ok = ~failed
+        np.testing.assert_array_equal(rl[ok], al[ok], err_msg=name)
+        np.testing.assert_array_equal(ru[ok], au[ok], err_msg=name)
+        np.testing.assert_array_equal(np.asarray(rd)[ok],
+                                      np.asarray(ad)[ok], err_msg=name)
+        assert bool(np.asarray(conv).all()), name
+
+
+@pytest.mark.parametrize("supersteps", [4, 16])
+def test_resident_fused_bit_parity_with_dom(supersteps):
+    """K fused supersteps in the megakernel equal K unfused `lanes_step`
+    iterations field-for-field — including the bitset stores — on a
+    table model under middle-out branching (the §17 resident path)."""
+    inst = zoo.small_instance("crossword", seed=0)
+    cm = zoo.ZOO["crossword"].build_model(inst)[0].compile()
+    opts = S.SearchOptions(max_depth=64, val_strategy=S.VAL_MIDDLE_OUT)
+    subs_lb, subs_ub = eps.decompose(cm, 8, opts)
+    subs_lb, subs_ub = jnp.asarray(subs_lb), jnp.asarray(subs_ub)
+    st0 = S.init_lanes(cm, 8, opts)
+    assert st0.dom is not None         # table model: bitset store active
+    gbest = jnp.asarray(jnp.iinfo(cm.jdtype).max // 4, cm.jdtype)
+    ref_st, ref_gbest = st0, gbest
+    pool_head = jnp.zeros((), jnp.int32)
+    it = 0
+    for _ in range(supersteps):
+        if bool(np.asarray(ref_st.done).all()):
+            break
+        ref_st, pool_head = S.lanes_step(cm, subs_lb, subs_ub, opts,
+                                         ref_st, ref_gbest, pool_head)
+        ref_gbest = jnp.minimum(ref_gbest, S.lanes_best(ref_st, cm.jdtype))
+        it += 1
+    st, gbest2, it2, head, _ = FK.search_pallas(
+        cm, subs_lb, subs_ub, st0, gbest, jnp.asarray(0, jnp.int32),
+        jnp.zeros((1,), jnp.int32), supersteps=supersteps, lane_tile=0,
+        val_strategy=S.VAL_MIDDLE_OUT, interpret=True)
+    for f in S.LaneState._fields:
+        av, bv = getattr(ref_st, f), getattr(st, f)
+        assert (av is None) == (bv is None), f
+        if av is None:
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(av).astype(np.int64),
+            np.asarray(bv).astype(np.int64),
+            err_msg=f"LaneState.{f} diverged")
+    assert int(gbest2) == int(ref_gbest)
+    assert int(it2) == it
+    assert int(head[0]) == int(pool_head)
+
+
+# --------------------------------------------------------------------------
+# parity oracles on the zoo models
+# --------------------------------------------------------------------------
+
+def _zoo_pair(name, seed):
+    mod = zoo.ZOO[name]
+    inst = zoo.small_instance(name, seed=seed)
+    mn, hn = mod.build_model(inst)
+    md, _ = mod.build_model(inst, decompose=True)
+    return mod, inst, hn, mn.compile(), md.compile()
+
+
+@pytest.mark.parametrize("name", ["crossword", "configuration"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_native_ct_matches_decomposed_optimum(name, seed):
+    """Native CT and the reified-disjunction oracle prove the same
+    optimum, and the ground checker accepts the native solution."""
+    mod, inst, hn, cmn, cmd = _zoo_pair(name, seed)
+    sess = solver.Solver(solver.SolveConfig.preset("prove", **SMALL))
+    rn, rd = sess.solve(cmn), sess.solve(cmd)
+    assert rn.status == rd.status == solver.OPTIMAL
+    assert rn.objective == rd.objective
+    assert zoo.ground_check(mod, inst, hn, rn) is True
+
+
+@pytest.mark.parametrize("backend", ["scatter", "pallas", "pallas_resident"])
+@pytest.mark.parametrize("name", ["crossword", "configuration"])
+def test_all_backends_same_objective_on_tables(backend, name):
+    """Every backend proves the gather optimum on the CT zoo models —
+    the §17 acceptance bar."""
+    mod, inst, hn, cmn, _ = _zoo_pair(name, seed=0)
+    ref = solver.Solver(solver.SolveConfig.preset(
+        "prove", **SMALL)).solve(cmn)
+    res = solver.Solver(solver.SolveConfig.preset(
+        "prove", backend=backend, **SMALL)).solve(cmn)
+    assert ref.status == res.status == solver.OPTIMAL, name
+    assert ref.objective == res.objective, name
+    assert zoo.ground_check(mod, inst, hn, res) is True
+
+
+@pytest.mark.parametrize("name", ["crossword", "configuration"])
+@pytest.mark.parametrize("val_strategy",
+                         [S.VAL_MIN, S.VAL_SPLIT, S.VAL_MIDDLE_OUT])
+def test_sequential_baseline_agrees(name, val_strategy):
+    """The event-driven CPU baseline (numpy CT transcription + bitset
+    DFS stack) proves the same optimum under every value strategy."""
+    mod, inst, hn, cmn, _ = _zoo_pair(name, seed=1)
+    cfg = solver.SolveConfig.preset("prove", val_strategy=val_strategy,
+                                    **SMALL)
+    rs = baseline.SequentialSolver(cmn, cfg.search_options()).solve(
+        timeout_s=120)
+    rp = solver.Solver(cfg).solve(cmn)
+    assert rs.status == rp.status == solver.OPTIMAL
+    assert rs.objective == rp.objective
+
+
+def test_middle_out_on_boundless_model_matches_split():
+    """middle_out works on table-free models too (dom synthesized just
+    for branching) and proves the same optimum as split."""
+    inst = zoo.small_instance("nqueens", seed=0)
+    cm = zoo.ZOO["nqueens"].build_model(inst)[0].compile()
+    r_split = solver.Solver(solver.SolveConfig.preset(
+        "prove", val_strategy=S.VAL_SPLIT, **SMALL)).solve(cm)
+    r_mid = solver.Solver(solver.SolveConfig.preset(
+        "prove", val_strategy=S.VAL_MIDDLE_OUT, **SMALL)).solve(cm)
+    assert r_split.status == r_mid.status == solver.OPTIMAL
+    assert r_split.objective == r_mid.objective
+
+
+def test_middle_out_selects_nearest_live_value():
+    """Unit: on dom {0, 4} of x ∈ (0,4) the mid is 2 and the nearest
+    live value below wins the tie rule → branch value 0."""
+    cm, (x, y, z) = _chain_model()
+    L = 1
+    lb = jnp.asarray(np.tile(np.asarray(cm.lb0), (L, 1)))
+    ub = jnp.asarray(np.tile(np.asarray(cm.ub0), (L, 1)))
+    dom = B.from_bounds(lb, ub, jnp.asarray(cm.dom_off), cm.n_words,
+                        track=jnp.asarray(cm.dom_track))
+    # carve x's domain down to {0, 4}
+    dom = dom.at[0, x.idx, 0].set(np.uint32(0b10001))
+    dec_var, dec_val = S.select_branch_tile(
+        lb, ub, jnp.asarray(cm.branch_vars), var_strategy=S.MIN_DOM,
+        val_strategy=S.VAL_MIDDLE_OUT, dom=dom,
+        dom_off=jnp.asarray(cm.dom_off))[:2]
+    assert int(dec_var[0]) == x.idx
+    assert int(dec_val[0]) == 0
+
+
+# --------------------------------------------------------------------------
+# statics: shape_signature, VMEM budget
+# --------------------------------------------------------------------------
+
+def test_shape_signature_separates_table_layouts():
+    """Same V and bounds, different table banks ⇒ different signatures
+    (the satellite-2 fix: a warm session must not reuse a runner whose
+    CT statics differ)."""
+    def base(tuples):
+        m = Model("sig")
+        xs = [m.int_var(0, 5, f"x{i}") for i in range(4)]
+        m.add(xs[0] + xs[1] <= 9)
+        if tuples:
+            m.table(xs, tuples)
+        m.minimize(xs[0])
+        m.branch_on(xs)
+        return m.compile()
+
+    no_table = base([])
+    small_t = base([(0, 1, 2, 3)] + [(1, 2, 3, 4)])
+    many_t = base([(i % 6, (i + 1) % 6, (i + 2) % 6, (i + 3) % 6)
+                   for i in range(40)])    # > 32 tuples: wider ct_words
+    sigs = {api.shape_signature(cm) for cm in (no_table, small_t, many_t)}
+    assert len(sigs) == 3
+    assert small_t.ct_words == 1 and many_t.ct_words == 2
+
+
+def test_vmem_budget_includes_ct_scratch_and_dom_stores():
+    cm = _mixed_ct_model()
+    b1, b8 = FK.vmem_budget(cm, 1), FK.vmem_budget(cm, 8)
+    assert set(b1) == {"tables", "stores", "state", "scratch", "total"}
+    assert b8["tables"] == b1["tables"]      # banks are lane-invariant
+    assert b8["stores"] == 8 * b1["stores"]  # dom words scale with lanes
+    assert b1["scratch"] > 0                 # CT unpacked members live here
+    # the bitset store really is accounted: stores > plain 2·V·4 per lane
+    assert b1["stores"] > 2 * cm.n_vars * 4
+    assert FK.fit_lane_tile(cm, 8, 8) == 8
